@@ -1,0 +1,44 @@
+"""Framework-level step benchmarks: wall time of reduced-config train and
+decode steps per architecture (CPU host — relative numbers only; TPU
+roofline projections live in EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced, list_archs
+from repro.models import LM
+from repro.optim import adamw, apply_updates
+
+
+def run(report):
+    for arch in list_archs():
+        cfg = get_reduced(arch)
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        opt = adamw(lr=1e-3)
+        opt_state = opt.init(params)
+        batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+                 "labels": jnp.zeros((2, 16), jnp.int32)}
+        if cfg.modality == "audio-stub":
+            batch["enc_embeds"] = jnp.zeros((2, 16, cfg.d_model))
+        if cfg.modality == "vision-stub":
+            batch["frontend_embeds"] = jnp.zeros((2, 8, cfg.d_model))
+
+        @jax.jit
+        def step(p, o, b):
+            loss, g = jax.value_and_grad(lm.loss)(p, b)
+            u, o = opt.update(g, o, p)
+            return apply_updates(p, u), o, loss
+
+        p1, o1, _ = step(params, opt_state, batch)   # compile
+        jax.block_until_ready(p1)
+        t0 = time.time()
+        n = 3
+        for _ in range(n):
+            p1, o1, loss = step(p1, o1, batch)
+        jax.block_until_ready(loss)
+        report(f"lm_step/{arch}/train_us", (time.time() - t0) * 1e6 / n,
+               round(float(loss), 3))

@@ -1,0 +1,28 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets with
+``python -m benchmarks.run [characterization|dae_potential|ablation|
+blocksparse|vs_handopt|lm_step]``.
+"""
+from __future__ import annotations
+
+import sys
+
+BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
+           "vs_handopt", "lm_step"]
+
+
+def main() -> None:
+    selected = sys.argv[1:] or BENCHES
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for b in selected:
+        mod = __import__(f"benchmarks.bench_{b}", fromlist=["run"])
+        mod.run(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: compile an EmbeddingBag through the full Ember pipeline.
+
+Shows the paper's progressive lowering end-to-end: SCF → SLC (decoupled)
+→ optimized SLCV → DLC (queue code) → the TPU KernelPlan, with the queue
+traffic shrinking at every opt level (Fig 14), and validates every stage
+against the numpy reference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.backend_pallas import execute as run_pallas, make_plan
+from repro.core.dlc import pretty as dlc_pretty
+from repro.core.ops import EmbeddingOp, make_inputs, reference
+from repro.core.pipeline import compile_op, run_interpreted
+from repro.core.slc import pretty as slc_pretty
+
+
+def main():
+    # an nn.EmbeddingBag / SLS: 8 segments, table of 64×96, weighted sum
+    op = EmbeddingOp(kind="sls", num_segments=8, num_embeddings=64,
+                     emb_len=96, avg_lookups=6, weighted=True)
+    inputs = make_inputs(op, seed=0)
+    want = reference(op, inputs)
+
+    print("=" * 72)
+    print("UNOPTIMIZED DECOUPLED CODE (emb-opt0) — SLC IR")
+    print("=" * 72)
+    res0 = compile_op(op, "O0")
+    print(slc_pretty(res0.slc))
+
+    print()
+    print("=" * 72)
+    print("FULLY OPTIMIZED (emb-opt3: vectorized+bufferized+aligned) — SLC")
+    print("=" * 72)
+    res3 = compile_op(op, "O3", vlen=16)
+    print(slc_pretty(res3.slc))
+
+    print()
+    print("=" * 72)
+    print("DLC (access-unit dataflow + execute-unit queue code), emb-opt3")
+    print("=" * 72)
+    print(dlc_pretty(res3.dlc))
+
+    print()
+    print("queue traffic per opt level (Fig 14):")
+    for lvl in ("O0", "O1", "O2", "O3"):
+        res = compile_op(op, lvl, vlen=16)
+        out, stats = run_interpreted(res, inputs, "dlc", return_queues=True)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+        print(f"  {lvl}: data items={stats['data_pushed']:5d} "
+              f"tokens={stats['tokens']:4d}   (semantics verified ✓)")
+
+    plan = make_plan(res3)
+    print(f"\nTPU KernelPlan: {plan}")
+    out = run_pallas(res3, inputs, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4)
+    print("Pallas DAE kernel output matches the reference ✓")
+
+
+if __name__ == "__main__":
+    main()

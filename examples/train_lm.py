@@ -1,0 +1,70 @@
+"""End-to-end driver: train an assigned-architecture LM with the full
+substrate — synthetic pipeline, AdamW, checkpointing, fault-tolerant
+supervisor with injected failures, optional gradient compression.
+
+Default preset is CPU-friendly; ``--preset 100m`` trains a ~100M-param
+stablelm-family model for a few hundred steps (use on a real accelerator).
+
+    PYTHONPATH=src python examples/train_lm.py --arch stablelm-3b --steps 40
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import LM, ModelConfig
+from repro.runtime.trainer import Trainer, TrainerConfig, run_supervised
+
+
+def preset_100m() -> ModelConfig:
+    return ModelConfig(name="stablelm-100m", family="dense", num_layers=12,
+                       d_model=768, num_heads=12, num_kv_heads=12,
+                       d_ff=2048, vocab_size=32000,
+                       block_pattern=("dense",), dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--preset", default=None, choices=[None, "100m"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = preset_100m() if args.preset == "100m" else get_reduced(args.arch)
+    lm = LM(cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lm.init, jax.random.PRNGKey(0))))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    data = SyntheticTokens(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, modality=cfg.modality,
+        d_model=cfg.d_model, enc_seq=args.seq))
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=max(
+        args.steps // 4, 1), ckpt_dir=ckpt_dir,
+        grad_compression=args.compress, log_every=5)
+
+    def make_trainer():
+        return Trainer(LM(cfg), data, tcfg)
+
+    schedule = {args.steps // 3, 2 * args.steps // 3} \
+        if args.inject_failures else None
+    out = run_supervised(make_trainer, jax.random.PRNGKey(0),
+                         failure_schedule=schedule)
+    losses = out["losses"]
+    print(f"finished step {out['final_step']} restarts={out['restarts']} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

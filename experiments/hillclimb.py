@@ -1,0 +1,42 @@
+"""§Perf hillclimb driver: run one (arch × shape) cell with config overrides.
+
+    PYTHONPATH=src python experiments/hillclimb.py gemma3-4b train_4k \
+        v1_seq_scatter embed_strategy=masked_psum_scatter
+
+Writes experiments/dryrun/<arch>__<shape>__single__<variant>.json.
+"""
+import sys
+
+from repro.launch.dryrun import run_cell  # sets XLA device-count flag first
+
+
+def parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false"):
+        return v == "true"
+    return v
+
+
+def main():
+    arch, shape, variant = sys.argv[1:4]
+    overrides = {}
+    for kv in sys.argv[4:]:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+    rec = run_cell(arch, shape, "single", skip_existing=False,
+                   variant=variant, overrides=overrides)
+    r = rec.get("roofline", {})
+    print(f"{arch} {shape} {variant}: status={rec['status']} "
+          f"compute={r.get('compute_s', 0):.3e}s "
+          f"memory={r.get('memory_s', 0):.3e}s "
+          f"collective={r.get('collective_s', 0):.3e}s "
+          f"bottleneck={r.get('bottleneck')} "
+          f"err={rec.get('error', '')[:100]}")
+
+
+if __name__ == "__main__":
+    main()

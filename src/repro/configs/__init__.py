@@ -1,0 +1,30 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full (paper-exact) ModelConfig;
+``get_reduced(name)`` a same-family small config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "xlstm-1.3b", "stablelm-3b", "gemma3-4b", "h2o-danube-1.8b",
+    "chatglm3-6b", "llava-next-34b", "qwen3-moe-235b-a22b",
+    "deepseek-v2-lite-16b", "whisper-large-v3", "zamba2-7b",
+]
+
+def _mod(name: str):
+    key = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str):
+    return _mod(name).config()
+
+
+def get_reduced(name: str):
+    return _mod(name).reduced()
+
+
+def list_archs():
+    return list(ARCHS)

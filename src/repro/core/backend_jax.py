@@ -1,0 +1,48 @@
+"""DLC → pure-JAX executor — the "traditional core" baseline (paper §3).
+
+This backend executes the embedding operation with stock XLA ops
+(gather + segment reduction), i.e. what a non-DAE machine runs.  It doubles
+as the at-scale oracle for the Pallas backend and as the sharding-friendly
+path used inside pjit'd models when no kernel is applicable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref
+from .ops import EmbeddingOp
+
+
+def execute(op: EmbeddingOp, inputs: dict) -> jnp.ndarray:
+    if op.kind == "gather":
+        return ref.block_gather(jnp.asarray(inputs["table"]),
+                                jnp.asarray(inputs["idxs"]),
+                                block_rows=op.block_rows)
+    if op.kind == "kg":
+        seg = np.arange(op.num_segments, dtype=np.int32)
+        return ref.sls(jnp.asarray(inputs["table"]),
+                       jnp.asarray(inputs["idxs"]), jnp.asarray(seg),
+                       jnp.asarray(inputs["vals"]),
+                       num_segments=op.num_segments,
+                       add_op=op.semiring.add, mul_op=op.semiring.mul)
+    seg = ref.csr_to_lookups(_ptrs_of(op, inputs))
+    if op.kind == "fusedmm":
+        return ref.fusedmm(jnp.asarray(inputs["x"]),
+                           jnp.asarray(inputs["idxs"]), jnp.asarray(seg),
+                           num_segments=op.num_segments)
+    w = inputs.get("vals")
+    return ref.sls(jnp.asarray(inputs["table"]), jnp.asarray(inputs["idxs"]),
+                   jnp.asarray(seg),
+                   None if w is None else jnp.asarray(w),
+                   num_segments=op.num_segments,
+                   add_op=op.semiring.add, mul_op=op.semiring.mul)
+
+
+def _ptrs_of(op: EmbeddingOp, inputs: dict) -> np.ndarray:
+    """CSR offsets from either index format (lengths → cumulative sum)."""
+    if op.index_format == "lengths" and "ptrs" not in inputs:
+        ptrs = np.zeros(op.num_segments + 1, np.int32)
+        np.cumsum(inputs["lens"], out=ptrs[1:])
+        return ptrs
+    return np.asarray(inputs["ptrs"])

@@ -1,0 +1,108 @@
+"""DLC → Pallas code generation (the paper's `tmu` dialect stage, for TPU).
+
+The optimized DLC program is erased into a :class:`KernelPlan` — the queue
+machinery becomes a DMA schedule (DESIGN.md §2) — and the plan parameterizes
+the generic DAE kernel templates in :mod:`repro.kernels`:
+
+=====================  =====================================================
+DLC/opt property        KernelPlan effect
+=====================  =====================================================
+vectorized (vlen)       column tile = round_up(vlen, 128) lanes
+bufferized              whole-row DMA per lookup (one block per table row);
+                        without it the kernel walks column tiles (more grid
+                        steps → more DMA descriptors ≙ queue traffic)
+queue_aligned           rows padded to the lane tile; output addressed from
+                        scalar-prefetched ptrs, no row-id marshaling
+store_streams           pure-copy kernel (block_gather) — VPU bypassed
+=====================  =====================================================
+
+Un-vectorized (O0) programs have no sensible TPU realization — a 1-lane VPU
+op does not exist — so O0/O1 differences below the lane width are modeled by
+the cost model, and the Pallas backend refuses plans narrower than a lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .ops import EmbeddingOp
+from .pipeline import CompileResult
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    kind: str
+    col_tile: int           # lane-tile of each DMA (queue "chunk")
+    whole_row_dma: bool     # bufferization: one DMA per embedding row
+    aligned: bool           # queue alignment: padded rows, no id marshaling
+    store_stream: bool      # §7.4 pure-copy path
+    num_buffers: int = 2    # DMA pipeline depth (the queue depth)
+
+    @property
+    def vmem_bytes_per_buffer(self) -> int:
+        return self.col_tile * 4 * self.num_buffers
+
+
+def make_plan(res: CompileResult) -> KernelPlan:
+    opt = res.opt
+    vlen = opt.get("vlen") or 0
+    if vlen and vlen < 128:
+        vlen = 128  # TPU lane width floor (see module docstring)
+    emb = res.op.emb_len
+    col_tile = min(_round_up(max(vlen, 128), 128), _round_up(emb, 128))
+    return KernelPlan(
+        kind=res.op.kind,
+        col_tile=col_tile,
+        whole_row_dma=bool(opt.get("bufferized")),
+        aligned=bool(opt.get("queue_aligned")),
+        store_stream=bool(opt.get("store_streams")),
+    )
+
+
+def execute(res: CompileResult, inputs: dict, interpret: bool = True):
+    """Run the compiled op through the Pallas DAE kernels."""
+    op = res.op
+    plan = make_plan(res)
+    if op.kind == "gather":
+        assert plan.store_stream or res.opt_level < "O3"
+        return kops.block_gather(jnp.asarray(inputs["table"]),
+                                 jnp.asarray(inputs["idxs"]),
+                                 block_rows=op.block_rows,
+                                 interpret=interpret)
+    if op.kind == "fusedmm":
+        ptrs = _ptrs_of(op, inputs)
+        return kops.fusedmm(jnp.asarray(inputs["x"]), jnp.asarray(ptrs),
+                            jnp.asarray(inputs["idxs"]),
+                            num_segments=op.num_segments,
+                            max_lookups=kops.max_lookups_of(ptrs),
+                            interpret=interpret)
+    if op.kind == "kg":
+        ptrs = np.arange(op.num_segments + 1, dtype=np.int32)
+        w = inputs["vals"]
+    else:
+        ptrs = _ptrs_of(op, inputs)
+        w = inputs.get("vals")
+    col_tile = plan.col_tile if plan.whole_row_dma else 128
+    return kops.sls(jnp.asarray(inputs["table"]), jnp.asarray(ptrs),
+                    jnp.asarray(inputs["idxs"]),
+                    None if w is None else jnp.asarray(w),
+                    num_segments=op.num_segments,
+                    max_lookups=kops.max_lookups_of(ptrs),
+                    add_op=op.semiring.add, mul_op=op.semiring.mul,
+                    col_tile=col_tile, interpret=interpret)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _ptrs_of(op: EmbeddingOp, inputs: dict) -> np.ndarray:
+    """CSR offsets from either index format (lengths → cumulative sum)."""
+    if op.index_format == "lengths" and "ptrs" not in inputs:
+        ptrs = np.zeros(op.num_segments + 1, np.int32)
+        np.cumsum(inputs["lens"], out=ptrs[1:])
+        return ptrs
+    return np.asarray(inputs["ptrs"])

@@ -1,0 +1,6 @@
+from .vectorize import vectorize
+from .bufferize import bufferize
+from .queue_align import queue_align
+from .model_specific import apply_store_streams
+
+__all__ = ["vectorize", "bufferize", "queue_align", "apply_store_streams"]

@@ -1,0 +1,72 @@
+"""emberc — the end-to-end Ember compiler driver (paper §5, Fig 11).
+
+    EmbeddingOp ──build_scf──▶ SCF ──decouple──▶ SLC
+        ──[vectorize]──▶ SLCV ──[bufferize]──▶ ──[store-streams]──▶
+        ──[queue-align]──▶ optimized SLC ──lower──▶ DLC
+        ──codegen──▶ {queue-faithful interpreter | jnp baseline | Pallas plan}
+
+Opt levels mirror the paper's ablation (Table 4):
+
+    O0  emb-opt0   unoptimized decoupled code
+    O1  emb-opt1   + vectorization           (§7.1)
+    O2  emb-opt2   + bufferization           (§7.2)
+    O3  emb-opt3   + queue alignment and model-specific store
+                     streams where applicable (§7.3, §7.4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .ops import EmbeddingOp
+from .scf import ScfFunc, build_scf
+from .decouple import decouple
+from .dlc import DlcProgram, lower_to_dlc
+from .passes import apply_store_streams, bufferize, queue_align, vectorize
+from .slc import SlcFunc
+
+OPT_LEVELS = ("O0", "O1", "O2", "O3")
+
+
+@dataclasses.dataclass
+class CompileResult:
+    op: EmbeddingOp
+    opt_level: str
+    scf: ScfFunc
+    slc: SlcFunc
+    dlc: DlcProgram
+
+    @property
+    def opt(self) -> dict:
+        return self.slc.opt
+
+
+def compile_op(op: EmbeddingOp, opt_level: str = "O3",
+               vlen: int = 128) -> CompileResult:
+    """Compile an embedding operation through the full IR stack."""
+    assert opt_level in OPT_LEVELS, opt_level
+    scf_fn = build_scf(op)
+    slc_fn = decouple(scf_fn)
+    if opt_level >= "O1":
+        slc_fn = vectorize(slc_fn, vlen=vlen)
+    if opt_level >= "O2":
+        slc_fn = bufferize(slc_fn)
+    if opt_level >= "O3":
+        slc_fn = apply_store_streams(slc_fn)
+        slc_fn = queue_align(slc_fn)
+    dlc_prog = lower_to_dlc(slc_fn)
+    return CompileResult(op, opt_level, scf_fn, slc_fn, dlc_prog)
+
+
+def run_interpreted(res: CompileResult, inputs: dict, stage: str = "dlc",
+                    return_queues: bool = False):
+    """Execute a compile result on the CPU reference interpreters."""
+    from . import interp
+    if stage == "scf":
+        from .scf import interp_scf
+        return interp_scf(res.scf, inputs)
+    if stage == "slc":
+        return interp.interp_slc(res.slc, inputs)
+    if stage == "dlc":
+        return interp.interp_dlc(res.dlc, inputs, return_queues=return_queues)
+    raise ValueError(stage)

@@ -1,0 +1,85 @@
+"""Reuse-distance / locality characterization (paper §2.2, Table 1).
+
+Temporal locality is characterized by the *reuse distance* of each access —
+the number of other distinct vectors touched since the last access to the
+same vector.  The CDF of reuse distances proxies the hit probability of a
+cache holding x vectors: ``CDF(x) ≈ hit rate``.  These tools generate the
+paper's L0/L1/L2 locality classes and feed both the characterization
+benchmark and the DAE cost model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def reuse_distances(trace: np.ndarray) -> np.ndarray:
+    """Exact reuse distances (−1 for first accesses) via an LRU stack
+    maintained with an order-statistics-free O(N·U) fallback or an O(N log N)
+    Fenwick tree over last-access times."""
+    trace = np.asarray(trace)
+    n = len(trace)
+    last_seen: dict = {}
+    # Fenwick tree over positions: 1 if that position is the *latest* access
+    # of its vector, else 0.  Reuse distance = # of set bits strictly between
+    # last_seen[v] and now.
+    tree = np.zeros(n + 1, np.int64)
+
+    def add(i, v):
+        i += 1
+        while i <= n:
+            tree[i] += v
+            i += i & (-i)
+
+    def prefix(i):
+        i += 1
+        s = 0
+        while i > 0:
+            s += tree[i]
+            i -= i & (-i)
+        return s
+
+    out = np.empty(n, np.int64)
+    for t, v in enumerate(trace):
+        if v in last_seen:
+            lp = last_seen[v]
+            out[t] = prefix(t - 1) - prefix(lp)
+            add(lp, -1)
+        else:
+            out[t] = -1
+        add(t, 1)
+        last_seen[v] = t
+    return out
+
+
+def reuse_cdf(trace: np.ndarray, xs: np.ndarray = None):
+    """(xs, CDF(xs)) — fraction of accesses with reuse distance ≤ x.
+
+    First accesses count as misses at every cache size (distance ∞)."""
+    d = reuse_distances(trace)
+    n = len(d)
+    if xs is None:
+        xs = np.unique(np.concatenate(
+            [[1, 2, 4], np.logspace(1, 7, 25).astype(np.int64)]))
+    reused = d[d >= 0]
+    cdf = np.array([(reused <= x).sum() / n for x in xs])
+    return xs, cdf
+
+
+def hit_rate(trace: np.ndarray, cache_vectors: int) -> float:
+    d = reuse_distances(trace)
+    return float((d[d >= 0] <= cache_vectors).sum() / len(d))
+
+
+def make_trace(num_vectors: int, num_accesses: int, locality: str = "L1",
+               seed: int = 0) -> np.ndarray:
+    """Synthetic DLRM-style traces with low/medium/high locality
+    (paper §8.1, following the Meta synthetic-input methodology [18])."""
+    rng = np.random.default_rng(seed)
+    alpha = {"L0": 0.0, "L1": 0.8, "L2": 1.4}[locality]
+    if alpha == 0.0:
+        return rng.integers(0, num_vectors, num_accesses).astype(np.int64)
+    ranks = np.arange(1, num_vectors + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    perm = rng.permutation(num_vectors)
+    return perm[rng.choice(num_vectors, size=num_accesses, p=p)]

@@ -1,0 +1,69 @@
+"""Block-sparse attention gather kernel (SpAttn, paper §2.2.2 / §7.4).
+
+The emb-opt3 form of this operation has *zero* queue traffic: Ember's
+store-stream optimization lets the access unit copy blocks straight from the
+table to the output.  The TPU analogue is a pure DMA-copy kernel: the scalar
+core (index map over scalar-prefetched ``idxs``) drives table-block DMAs
+into VMEM, and the body is a straight VMEM→VMEM copy — the VPU never touches
+the data, mirroring "bypass the core" (DESIGN.md §2).
+
+The paper's L2-residency hint (reused blocks served from L2, Fig 18) maps to
+the revisit behavior of the block pipeline: consecutive grid steps hitting
+the same table block skip the re-fetch (Pallas keeps the block in VMEM), so
+sorted/clustered indices get the same traffic filtering — the cost model's
+``resident_blocks`` discount.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idxs, table_block, out):
+    # store-stream: pure copy, no compute
+    out[0] = table_block[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def block_gather_pallas(table, idxs, *, block_rows: int = 1,
+                        interpret: bool = False):
+    """out[g, r, :] = table[idxs[g] * block_rows + r, :]
+
+    table (N*block_rows, E); idxs (G,) int32 — scalar-prefetched.
+    """
+    n_rows, emb_len = table.shape
+    num_blocks = idxs.shape[0]
+    padded = _round_up(emb_len, 128)
+    if padded != emb_len:
+        table = jnp.pad(table, ((0, 0), (0, padded - emb_len)))
+
+    grid = (num_blocks,)
+
+    def table_map(g, idxs_ref):
+        return idxs_ref[g], 0
+
+    def out_map(g, idxs_ref):
+        return g, 0, 0
+
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((block_rows, padded),
+                                   table_map)],
+            out_specs=pl.BlockSpec((1, block_rows, padded), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, block_rows, padded),
+                                       table.dtype),
+        interpret=interpret,
+    )(idxs, table)
+    return out[..., :emb_len]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

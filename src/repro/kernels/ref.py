@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (and the `traditional core`
+baseline the paper compares DAE against).
+
+All functions are jit-compatible and shape-static.  CSR inputs are given in
+*segment-id* form (``seg_ids`` sorted ascending, one per lookup) because XLA
+needs static shapes; :func:`csr_to_lookups` converts from the paper's
+``ptrs`` form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEG_REDUCERS = {
+    "add": jax.ops.segment_sum,
+    "max": jax.ops.segment_max,
+    "min": jax.ops.segment_min,
+}
+
+
+def csr_to_lookups(ptrs: np.ndarray) -> np.ndarray:
+    """ptrs (B+1,) -> seg_ids (nnz,) — host-side preprocessing."""
+    lens = np.diff(ptrs)
+    return np.repeat(np.arange(len(lens)), lens).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "add_op", "mul_op"))
+def sls(table, idxs, seg_ids, weights=None, *, num_segments: int,
+        add_op: str = "add", mul_op: str = "mul"):
+    """Sparse-lengths-sum / EmbeddingBag: out[b] = ⊕_{p: seg[p]=b} w_p ⊗ T[i_p].
+
+    Covers the paper's SLS (dlrm), SpMM (gnn, weighted), and KG (semiring,
+    single-lookup segments) operations.
+    """
+    rows = jnp.take(table, idxs, axis=0)
+    if weights is not None:
+        w = weights[:, None].astype(rows.dtype)
+        rows = rows * w if mul_op == "mul" else rows + w
+    out = _SEG_REDUCERS[add_op](rows, seg_ids, num_segments=num_segments)
+    if add_op != "add":
+        # empty segments: identity -> 0.0 (SLS convention)
+        counts = jax.ops.segment_sum(jnp.ones_like(seg_ids), seg_ids,
+                                     num_segments=num_segments)
+        out = jnp.where(counts[:, None] > 0, out, 0.0)
+    return out.astype(table.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def block_gather(table, idxs, *, block_rows: int = 1):
+    """BigBird-style block-sparse gather: out[g, r] = T[idxs[g]*R + r]."""
+    rows = idxs[:, None] * block_rows + jnp.arange(block_rows)[None, :]
+    return jnp.take(table, rows.reshape(-1), axis=0).reshape(
+        idxs.shape[0], block_rows, table.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "fn"))
+def fusedmm(x, idxs, seg_ids, *, num_segments: int, fn: str = "identity"):
+    """FusedMM (message passing): SDDMM + SpMM in one pass.
+
+    out[i] = Σ_{p: seg[p]=i} f(<x[i], x[j_p]>) · x[j_p]
+    """
+    xi = jnp.take(x, seg_ids, axis=0)
+    xj = jnp.take(x, idxs, axis=0)
+    s = jnp.sum(xi * xj, axis=-1)
+    if fn == "relu":
+        s = jnp.maximum(s, 0.0)
+    contrib = s[:, None] * xj
+    return jax.ops.segment_sum(contrib, seg_ids,
+                               num_segments=num_segments).astype(x.dtype)
+
+
+def attention_reference(q, k, v, *, causal: bool = True, scale=None):
+    """O(S²)-memory attention oracle for the flash kernel (small shapes)."""
+    s = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("...qhd,...khd->...hqk", q, k).astype(jnp.float32) * s
+    if causal:
+        qlen, klen = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((qlen, klen), bool), k=klen - qlen)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...hqk,...khd->...qhd", p, v).astype(q.dtype)

@@ -1,0 +1,130 @@
+"""DAE-style SLS / EmbeddingBag Pallas TPU kernel.
+
+TPU-native realization of the Ember-compiled DLC program (DESIGN.md §2):
+
+* **access unit** ≙ the scalar core executing ``PrefetchScalarGridSpec``
+  index maps: the CSR ``ptrs``/``idxs`` arrays are scalar-prefetched, and the
+  per-grid-step index map computes *which table row to DMA next* — running
+  ahead of compute exactly like the TMU traversal engine;
+* **queues** ≙ Pallas's double-buffered block pipeline: while the VPU
+  reduces lookup ``j``, the DMA for lookup ``j+1`` is in flight;
+* **execute unit** ≙ the kernel body (vector ⊕/⊗ on 8×128 vregs).
+
+The kernel is *segment-major*: grid = (num_segments, max_lookups); segments
+are padded to ``max_lookups`` and the tail is masked with ``@pl.when`` (the
+SLCV mask stream of §7.1).  The compiler's KernelPlan chooses the column
+tile (``vlen`` → queue alignment pads the row to a multiple of 128 lanes),
+whether whole rows are marshaled per DMA (bufferization) and the pipeline
+depth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INIT = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}
+_COMBINE = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
+
+
+def _sls_kernel(ptrs, idxs, table_row, weights, out, *, add_op, mul_op,
+                weighted):
+    """One grid step = one (segment b, column tile c, lookup slot j)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)   # innermost: the out block (b, c) is revisited
+                           # consecutively across j, enabling VMEM-resident
+                           # accumulation (the DAE execute-unit loop)
+    beg = ptrs[b]
+    end = ptrs[b + 1]
+    n = end - beg
+
+    @pl.when(j == 0)
+    def _init():
+        out[...] = jnp.full_like(out, _INIT[add_op])
+
+    @pl.when(j < n)
+    def _accumulate():
+        row = table_row[...]
+        if weighted:
+            w = weights[0, beg + j].astype(row.dtype)
+            row = row * w if mul_op == "mul" else row + w
+        out[...] = _COMBINE[add_op](out[...], row)
+
+    # SLS convention: empty segments produce 0 even for max/min semirings
+    @pl.when((j == pl.num_programs(2) - 1) & (n == 0))
+    def _empty():
+        out[...] = jnp.zeros_like(out)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "max_lookups", "add_op", "mul_op",
+                     "col_tile", "interpret"))
+def sls_pallas(table, ptrs, idxs, weights=None, *, num_segments: int,
+               max_lookups: int, add_op: str = "add", mul_op: str = "mul",
+               col_tile: int = 128, interpret: bool = False):
+    """Compiler entry point (see `repro.core.backend_pallas.KernelPlan`).
+
+    table     (N, E)   embedding table (HBM resident)
+    ptrs      (B+1,)   CSR segment offsets  — scalar-prefetched
+    idxs      (nnz,)   row indices          — scalar-prefetched
+    weights   (nnz,)   optional per-lookup scale (GNN edge values)
+    """
+    n_rows, emb_len = table.shape
+    # queue alignment (§7.3): pad the row to a lane-aligned tile so every
+    # marshaled vector is VMEM-tile aligned
+    col_tile = min(col_tile, _round_up(emb_len, 128))
+    padded = _round_up(emb_len, col_tile)
+    if padded != emb_len:
+        table = jnp.pad(table, ((0, 0), (0, padded - emb_len)))
+    col_blocks = padded // col_tile
+
+    weighted = weights is not None
+    if not weighted:
+        weights = jnp.zeros((1,), table.dtype)
+    weights2d = weights[None, :]  # SMEM scalars must be ≥1-d arrays
+    if idxs.shape[0] == 0:        # degenerate all-empty batch
+        idxs = jnp.zeros((1,), jnp.int32)
+
+    grid = (num_segments, col_blocks, max_lookups)
+
+    def table_map(b, c, j, ptrs_ref, idxs_ref):
+        beg = ptrs_ref[b]
+        n = ptrs_ref[b + 1] - beg
+        # masked tail: clamp to a safe row; @pl.when skips the accumulate
+        p = beg + jnp.minimum(j, jnp.maximum(n - 1, 0))
+        return idxs_ref[jnp.minimum(p, idxs_ref.shape[0] - 1)], c
+
+    def out_map(b, c, j, ptrs_ref, idxs_ref):
+        return b, c
+
+    kernel = functools.partial(_sls_kernel, add_op=add_op, mul_op=mul_op,
+                               weighted=weighted)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, col_tile), table_map),   # one row tile/DMA
+                pl.BlockSpec(memory_space=pltpu.SMEM),    # weights (scalar)
+            ],
+            out_specs=pl.BlockSpec((1, col_tile), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_segments, padded), table.dtype),
+        interpret=interpret,
+    )(ptrs, idxs, table, weights2d)
+    return out[:, :emb_len]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def max_lookups_of(ptrs: np.ndarray) -> int:
+    return int(np.diff(ptrs).max(initial=0)) or 1

@@ -1,0 +1,160 @@
+"""train_step / serve_step factories + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct stand-ins for
+every model input — no device allocation — which is what both the multi-pod
+dry-run and the roofline analysis lower against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import LM, ModelConfig, ShardCtx
+from ..optim import adamw, apply_updates
+from . import sharding as shd
+from .mesh import data_axes_of
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the documented skip reason."""
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        return ("full-attention arch: 500k decode needs sub-quadratic "
+                "attention state (DESIGN.md §4)")
+    return None
+
+
+def make_batch_struct(cfg: ModelConfig, seq: int, batch: int,
+                      kind: str) -> dict:
+    i32 = jnp.int32
+    d = cfg.jdtype
+    out: dict = {}
+    if kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    elif kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    else:  # decode: one new token against a cache of `seq`
+        out["tokens"] = jax.ShapeDtypeStruct((batch, 1), i32)
+    if cfg.modality == "audio-stub" and kind != "decode":
+        out["enc_embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), d)
+    if cfg.modality == "vision-stub" and kind != "decode":
+        from ..configs.llava_next_34b import VISION_TOKENS
+        n = min(VISION_TOKENS, seq)
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, n, cfg.d_model), d)
+    return out
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    fn: object               # jit-able step function
+    args: tuple              # ShapeDtypeStructs (abstract) in order
+    in_shardings: tuple
+    kind: str
+
+
+def make_lm(cfg: ModelConfig, mesh, remat: str = "dots",
+            cost_mode: bool = False) -> LM:
+    shard = ShardCtx(mesh=mesh, data_axes=data_axes_of(mesh),
+                     model_axis="model", remat=remat, cost_mode=cost_mode)
+    return LM(cfg, shard)
+
+
+def build_train_bundle(cfg: ModelConfig, mesh, seq: int, batch: int,
+                       remat: str = "dots",
+                       cost_mode: bool = False) -> StepBundle:
+    lm = make_lm(cfg, mesh, remat, cost_mode=cost_mode)
+    opt = adamw(lr=3e-4)
+    params_s = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    batch_struct = make_batch_struct(cfg, seq, batch, "train")
+
+    p_specs = shd.sanitize_specs(shd.param_specs(params_s), params_s, mesh)
+    mu_specs = shd.zero1_specs(params_s, p_specs, data_axes_of(mesh), mesh)
+    from ..optim.adamw import AdamWState
+    opt_specs = AdamWState(jax.sharding.PartitionSpec(), mu_specs, mu_specs)
+    b_specs = shd.batch_specs(batch_struct, batch, mesh, data_axes_of(mesh))
+
+    def train_step(params, opt_state, batch_):
+        loss, grads = jax.value_and_grad(lm.loss)(params, batch_)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    in_sh = (shd.to_shardings(mesh, p_specs),
+             shd.to_shardings(mesh, opt_specs),
+             shd.to_shardings(mesh, b_specs))
+    return StepBundle(train_step, (params_s, opt_s, batch_struct), in_sh,
+                      "train")
+
+
+def build_prefill_bundle(cfg: ModelConfig, mesh, seq: int,
+                         batch: int, cost_mode: bool = False) -> StepBundle:
+    lm = make_lm(cfg, mesh, remat="none", cost_mode=cost_mode)
+    params_s = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    batch_struct = make_batch_struct(cfg, seq, batch, "prefill")
+    p_specs = shd.sanitize_specs(shd.param_specs(params_s), params_s, mesh)
+    b_specs = shd.batch_specs(batch_struct, batch, mesh, data_axes_of(mesh))
+
+    def prefill_step(params, batch_):
+        return lm.prefill(params, batch_, None)
+
+    in_sh = (shd.to_shardings(mesh, p_specs),
+             shd.to_shardings(mesh, b_specs))
+    return StepBundle(prefill_step, (params_s, batch_struct), in_sh,
+                      "prefill")
+
+
+def build_decode_bundle(cfg: ModelConfig, mesh, cache_len: int,
+                        batch: int, cost_mode: bool = False) -> StepBundle:
+    lm = make_lm(cfg, mesh, remat="none", cost_mode=cost_mode)
+    params_s = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    caches_s = jax.eval_shape(
+        lambda: lm.init_caches(batch, cache_len), )
+    batch_struct = make_batch_struct(cfg, cache_len, batch, "decode")
+    da = data_axes_of(mesh)
+    p_specs = shd.sanitize_specs(shd.param_specs(params_s), params_s, mesh)
+    c_specs = shd.cache_specs(caches_s, batch, mesh, da)
+    b_specs = shd.batch_specs(batch_struct, batch, mesh, da)
+
+    extra = {}
+    if cfg.enc_layers:  # whisper cross-attention context
+        extra["enc_out"] = jax.ShapeDtypeStruct(
+            (batch, min(cfg.enc_seq, cache_len), cfg.d_model), cfg.jdtype)
+    e_specs = shd.batch_specs(extra, batch, mesh, da) if extra else {}
+
+    def serve_step(params, tokens, caches, extra_):
+        logits, caches = lm.decode_step(params, tokens, caches,
+                                        batch_ctx=extra_ or None)
+        return logits, caches
+
+    in_sh = (shd.to_shardings(mesh, p_specs),
+             shd.to_shardings(mesh, b_specs)["tokens"],
+             shd.to_shardings(mesh, c_specs),
+             shd.to_shardings(mesh, e_specs))
+    return StepBundle(serve_step,
+                      (params_s, batch_struct["tokens"], caches_s, extra),
+                      in_sh, "decode")
+
+
+def build_bundle(cfg: ModelConfig, mesh, shape_name: str,
+                 remat: str = "dots",
+                 cost_mode: bool = False) -> StepBundle:
+    seq, batch, kind = SHAPES[shape_name]
+    if kind == "train":
+        return build_train_bundle(cfg, mesh, seq, batch, remat, cost_mode)
+    if kind == "prefill":
+        return build_prefill_bundle(cfg, mesh, seq, batch, cost_mode)
+    return build_decode_bundle(cfg, mesh, seq, batch, cost_mode)

@@ -1,0 +1,4 @@
+from .common import ModelConfig
+from .lm import LM, ShardCtx
+
+__all__ = ["ModelConfig", "LM", "ShardCtx"]

@@ -1,0 +1,319 @@
+"""Attention layers: blockwise (memory-O(S·chunk)) GQA with full/sliding
+window, decode-with-cache, and DeepSeek MLA.
+
+Blockwise attention is the jnp fallback of the Pallas flash kernel
+(`repro.kernels.flash_attention`) — the dry-run and CPU tests lower this
+path; on a TPU runtime the kernel is selected instead.  The online-softmax
+scan over KV chunks keeps live memory at O(S·chunk) per head, which is what
+makes the 32k-prefill and 500k shapes compile inside HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rope_freqs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise multi-query/grouped attention (training & prefill)
+# ---------------------------------------------------------------------------
+
+def dense_attention(q, k, v, *, causal=True, window=None):
+    """Plain O(S²)-memory attention. COST-MODE / small-shape path: flop-
+    identical to the blockwise path but scan-free, so XLA cost analysis
+    counts every block (scan bodies are counted once, see roofline docs)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * d ** -0.5
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p_ = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p_.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, chunk: int = 512,
+                        banded: bool = True, dense: bool = False):
+    """q (B,Sq,H,D); k,v (B,Sk,Hkv,D); GQA via head grouping. -> (B,Sq,H,D)
+
+    ``banded=True`` with a window slides a static band of KV chunks along
+    the diagonal (computes only ceil(window/chunk)+1 chunks per q chunk)
+    instead of masking the full row — the O(S·w) sliding-window path.
+    ``dense=True`` switches to the scan-free cost-mode path.
+    """
+    if dense:
+        return dense_attention(q, k, v, causal=causal, window=window)
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                        # MLA: value dim ≠ qk dim
+    g = h // hkv
+    assert sq % chunk == 0 and sk % chunk == 0, (sq, sk, chunk)
+    nq, nk = sq // chunk, sk // chunk
+    scale = d ** -0.5
+
+    qc = q.reshape(b, nq, chunk, hkv, g, d)
+    kc = k.reshape(b, nk, chunk, hkv, d)
+    vc = v.reshape(b, nk, chunk, hkv, dv)
+
+    use_band = banded and window is not None and window < sk
+    if use_band:
+        band = -(-window // chunk) + 1          # kv chunks per q chunk
+        band = min(band, nk)
+
+    def q_step(_, qi):
+        qblk = qc[:, qi]                        # (b, C, hkv, g, d)
+        q_pos = qi * chunk + jnp.arange(chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = kj * chunk + jnp.arange(chunk)
+            mask = jnp.ones((chunk, chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, chunk, dv), jnp.float32)
+        if use_band:
+            start = jnp.maximum(qi - (band - 1), 0)
+            kjs = start + jnp.arange(band)
+        elif causal:
+            # static full scan; masked chunks above the diagonal contribute
+            # nothing (hillclimb note: ~2× FLOP waste vs triangular skip)
+            kjs = jnp.arange(nk)
+        else:
+            kjs = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kjs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)        # (b, hkv, g, C, d)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, b, hkv, g, C, dv) -> (b, S, h, dv)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    return out.reshape(b, sq, h, dv)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None):
+    """q (B,1,H,D); caches (B,Smax,Hkv,D); cache_len scalar (incl. new tok)."""
+    b, _, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * d ** -0.5
+    pos = jnp.arange(smax)
+    mask = pos < cache_len
+    if window is not None:
+        mask &= pos >= cache_len - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (params, fwd, decode)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+
+
+def attn_forward(p, x, cfg: ModelConfig, *, positions, causal=True,
+                 window=None, kv=None, dense=False):
+    """x (B,S,D). ``kv`` overrides K/V source (cross-attention)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    src = kv if kv is not None else x
+    sk = src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (src @ p["wk"]).reshape(b, sk, hkv, hd)
+    v = (src @ p["wv"]).reshape(b, sk, hkv, hd)
+    if kv is None:  # self-attention: rotary
+        cos, sin = rope_freqs(positions, hd, cfg.rope_theta, cfg.rotary_pct)
+        q = apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    import math
+    from .common import pick_chunk
+    chunk = pick_chunk(math.gcd(s, sk), min(cfg.attn_chunk, s))
+    o = blockwise_attention(q, k, v, causal=causal and kv is None,
+                            window=window, chunk=chunk, dense=dense)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache, *, window=None):
+    """x (B,1,D); cache dict {k,v:(B,Smax,Hkv,hd), len: scalar} (self-attn)."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    pos = cache["len"]
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    cos, sin = rope_freqs(pos[None, None].astype(jnp.float32), hd,
+                          cfg.rope_theta, cfg.rotary_pct)
+    q = apply_rope(q, cos, sin, cfg.rotary_pct)
+    k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    if "k_scale" in cache:   # int8 quantized cache
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+        ks_c = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, pos, 0))
+        vs_c = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, pos, 0))
+        kd = _dequant_kv(k_cache, ks_c, x.dtype)
+        vd = _dequant_kv(v_cache, vs_c, x.dtype)
+        o = decode_attention(q, kd, vd, pos + 1, window=window)
+        new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_c,
+                     "v_scale": vs_c, "len": pos + 1}
+        return o.reshape(b, 1, h * hd) @ p["wo"], new_cache
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+    return o.reshape(b, 1, h * hd) @ p["wo"], new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch, max_len, dtype):
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    if cfg.kv_cache_dtype == "int8":
+        # beyond-paper serving optimization: per-(token, head) block-scaled
+        # int8 KV — halves-to-quarters the decode memory term (§Perf)
+        return {"k": jnp.zeros((batch, max_len, hkv, hd), jnp.int8),
+                "v": jnp.zeros((batch, max_len, hkv, hd), jnp.int8),
+                "k_scale": jnp.zeros((batch, max_len, hkv), jnp.float32),
+                "v_scale": jnp.zeros((batch, max_len, hkv), jnp.float32),
+                "len": jnp.array(0, jnp.int32)}
+    return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "len": jnp.array(0, jnp.int32)}
+
+
+def _quant_kv(x):
+    """x (b,1,h,d) -> int8 values + per-(token,head) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, h, hd, r = cfg.d_model, cfg.num_heads, cfg.hd, cfg.kv_lora_rank
+    rd = cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (hd + rd)), dtype),
+        "w_dkv": dense_init(ks[1], (d, r), dtype),
+        "w_uk": dense_init(ks[2], (r, h * hd), dtype),
+        "w_uv": dense_init(ks[3], (r, h * hd), dtype),
+        "w_kr": dense_init(ks[4], (d, rd), dtype),
+        "wo": dense_init(ks[5], (h * hd, d), dtype),
+    }
+
+
+def mla_forward(p, x, cfg: ModelConfig, *, positions, dense=False):
+    b, s, _ = x.shape
+    h, hd, rd = cfg.num_heads, cfg.hd, cfg.rope_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd + rd)
+    qn, qr = q[..., :hd], q[..., hd:]
+    c = x @ p["w_dkv"]                                 # (b,s,r) latent KV
+    kn = (c @ p["w_uk"]).reshape(b, s, h, hd)
+    v = (c @ p["w_uv"]).reshape(b, s, h, hd)
+    kr = (x @ p["w_kr"]).reshape(b, s, 1, rd)
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+    kr = apply_rope(kr, cos, sin)
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    kf = jnp.concatenate([kn, jnp.broadcast_to(kr, (b, s, h, rd))], axis=-1)
+    from .common import pick_chunk
+    chunk = pick_chunk(s, min(cfg.attn_chunk, s))
+    o = blockwise_attention(qf, kf, v, causal=True, chunk=chunk, dense=dense)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache):
+    """MLA decode caches the *latent* c (B,S,r) + k_rope — the 5-10× KV
+    memory reduction that makes deepseek decode_32k fit."""
+    b = x.shape[0]
+    h, hd, rd, r = cfg.num_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora_rank
+    pos = cache["len"]
+    q = (x @ p["wq"]).reshape(b, 1, h, hd + rd)
+    qn, qr = q[..., :hd], q[..., hd:]
+    c = x @ p["w_dkv"]
+    kr = (x @ p["w_kr"]).reshape(b, 1, 1, rd)
+    cos, sin = rope_freqs(pos[None, None].astype(jnp.float32), rd,
+                          cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+    kr = apply_rope(kr, cos, sin)
+    c_cache = jax.lax.dynamic_update_slice(cache["c"], c.reshape(b, 1, r),
+                                           (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(cache["kr"], kr.reshape(b, 1, rd),
+                                            (0, pos, 0))
+    # absorbed attention: score = qn·(c W_uk) + qr·kr
+    kn = jnp.einsum("bsr,rhd->bshd", c_cache,
+                    p["w_uk"].reshape(r, h, hd))
+    sc = (jnp.einsum("bqhd,bshd->bhqs", qn, kn) +
+          jnp.einsum("bqhd,bsd->bhqs", qr, kr_cache)) * (hd + rd) ** -0.5
+    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos
+    sc = jnp.where(mask[None, None, :, :][..., 0, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc.astype(jnp.float32), axis=-1)
+    v = jnp.einsum("bsr,rhd->bshd", c_cache, p["w_uv"].reshape(r, h, hd))
+    o = jnp.einsum("bhqs,bshd->bqhd", pr.astype(v.dtype), v)
+    new_cache = {"c": c_cache, "kr": kr_cache, "len": pos + 1}
+    return o.reshape(b, 1, h * hd) @ p["wo"], new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch, max_len, dtype):
+    return {"c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+            "len": jnp.array(0, jnp.int32)}

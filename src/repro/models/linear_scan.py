@@ -1,0 +1,64 @@
+"""Shared chunked gated-linear-recurrence core.
+
+One algorithm serves both Mamba2's SSD and xLSTM's mLSTM (and any
+linear-attention variant): the recurrence
+
+    S_t = exp(a_t) · S_{t-1} + scale_t · x_t ⊗ B_t          (state (h,p,n))
+    y_t = (C_t · S_t)                                        (readout)
+
+is evaluated chunk-parallel: O(L²) attention-like contraction within each
+chunk, a ``lax.scan`` carrying S across chunks.  All O(L²) intermediates are
+chunk-local (never (S/L, L, L) global), so the 500k-token shapes fit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_linear_scan(x, a, scale, B, C, chunk: int, state0=None,
+                      unroll: bool = False):
+    """x (b,s,h,p); a,scale (b,s,h); B,C (b,s,h,n). Returns (y, S_final)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h)
+    sc = scale.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, h, n)
+    Cc = C.reshape(b, nc, chunk, h, n)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(S_prev, inp):
+        xc_, ac_, sc_, Bc_, Cc_ = inp
+        acs = jnp.cumsum(ac_, axis=1)                       # (b,L,h)
+        decay = jnp.exp(acs[:, :, None, :] - acs[:, None, :, :])
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("bihn,bjhn->bijh", Cc_, Bc_)
+        w = cb * decay * sc_[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w.astype(x.dtype), xc_)
+        y_inter = jnp.einsum("blhn,bhpn,blh->blhp", Cc_, S_prev,
+                             jnp.exp(acs).astype(x.dtype))
+        tail = jnp.exp(acs[:, -1:, :] - acs) * sc_          # (b,L,h)
+        S_new = jnp.einsum("blh,blhp,blhn->bhpn", tail.astype(x.dtype),
+                           xc_, Bc_)
+        cd = jnp.exp(acs[:, -1, :])
+        S_next = (S_prev * cd[:, :, None, None].astype(x.dtype) +
+                  S_new).astype(x.dtype)   # keep the carry dtype stable
+        return S_next, (y_intra + y_inter).astype(x.dtype)
+
+    S0 = state0 if state0 is not None else jnp.zeros((b, h, p, n), x.dtype)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, ac, sc, Bc, Cc))
+    S_final, ys = jax.lax.scan(step, S0, inputs,
+                               unroll=nc if unroll else 1)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p), S_final
+
+
+def gated_linear_step(S_prev, x, a, scale, B, C):
+    """Single-token recurrence (decode). x (b,h,p); a,scale (b,h); B,C (b,h,n)."""
+    decay = jnp.exp(a)[:, :, None, None].astype(x.dtype)
+    S = S_prev * decay + jnp.einsum("bh,bhp,bhn->bhpn",
+                                    scale.astype(x.dtype), x, B)
+    y = jnp.einsum("bhn,bhpn->bhp", C, S)
+    return y, S

@@ -1,0 +1,457 @@
+"""LM assembly: block registry + scan-over-super-blocks transformer.
+
+The depth dimension is folded into a ``jax.lax.scan`` over *super-blocks*
+(one repetition of ``cfg.block_pattern``), so HLO size is independent of
+depth — mandatory for compiling 94-layer models on one host and the right
+structure at cluster scale.  Heterogeneous stacks (gemma3's 5 local : 1
+global, zamba2's 5 mamba : 1 shared-attention) are expressed by the pattern;
+depths not divisible by the pattern get an unscanned remainder stack.
+
+Zamba2's *shared* attention block (one set of weights reused at every
+occurrence) lives outside the scanned params and enters the scan body by
+closure — parameter sharing that scan's per-step slicing cannot express.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import embedding_engine as ee
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .common import ModelConfig, init_mlp, init_rms, gated_mlp, rms_norm
+
+ATTN_KINDS = ("dense", "dense_local", "moe", "shared_attn", "enc_dense",
+              "xdec")
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply / decode / cache — registry
+# ---------------------------------------------------------------------------
+
+def init_block(kind: str, key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    if kind in ("dense", "dense_local", "enc_dense"):
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "attn": attn.init_attn(ks[1], cfg, dtype),
+                "norm2": init_rms(ks[2], cfg.d_model, dtype),
+                "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)}
+    if kind == "moe":
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "attn": attn.init_attn(ks[1], cfg, dtype),
+                "norm2": init_rms(ks[2], cfg.d_model, dtype),
+                "moe": moe_mod.init_moe(ks[3], cfg, dtype)}
+    if kind == "mla":
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "attn": attn.init_mla(ks[1], cfg, dtype),
+                "norm2": init_rms(ks[2], cfg.d_model, dtype),
+                "moe": moe_mod.init_moe(ks[3], cfg, dtype)}
+    if kind == "mamba":
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "mamba": ssm_mod.init_mamba(ks[1], cfg, dtype)}
+    if kind == "mlstm":
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "mlstm": xlstm_mod.init_mlstm(ks[1], cfg, dtype)}
+    if kind == "slstm":
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "slstm": xlstm_mod.init_slstm(ks[1], cfg, dtype)}
+    if kind == "shared_attn":
+        # per-occurrence params are just the norms; weights come shared
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "norm2": init_rms(ks[1], cfg.d_model, dtype)}
+    if kind == "xdec":
+        k5, k6 = jax.random.split(ks[3])
+        return {"norm1": init_rms(ks[0], cfg.d_model, dtype),
+                "attn": attn.init_attn(ks[1], cfg, dtype),
+                "norm_x": init_rms(ks[2], cfg.d_model, dtype),
+                "xattn": attn.init_attn(k5, cfg, dtype),
+                "norm2": init_rms(k6, cfg.d_model, dtype),
+                "mlp": init_mlp(jax.random.fold_in(key, 7), cfg.d_model,
+                                cfg.d_ff, dtype)}
+    raise ValueError(kind)
+
+
+def block_apply(kind: str, p, x, cfg: ModelConfig, ctx: dict):
+    """Full-sequence forward. Returns (x, aux_loss)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "dense_local", "enc_dense", "moe", "mla"):
+        window = cfg.sliding_window if kind == "dense_local" else None
+        causal = kind != "enc_dense"
+        h = rms_norm(x, p["norm1"], eps)
+        dense = ctx.get("cost_mode", False)
+        if kind == "mla":
+            h = attn.mla_forward(p["attn"], h, cfg,
+                                 positions=ctx["positions"], dense=dense)
+        else:
+            h = attn.attn_forward(p["attn"], h, cfg,
+                                  positions=ctx["positions"],
+                                  causal=causal, window=window, dense=dense)
+        x = x + h
+        h = rms_norm(x, p["norm2"], eps)
+        if kind in ("moe", "mla"):
+            h, aux = moe_mod.moe_ffn(p["moe"], h, cfg, mesh=ctx.get("mesh"),
+                                     ep_axis=ctx.get("ep_axis"),
+                                     data_axes=ctx.get("data_axes", ()))
+        else:
+            h = gated_mlp(h, p["mlp"], cfg.act)
+        return x + h, aux
+    if kind == "mamba":
+        return x + ssm_mod.mamba_forward(
+            p["mamba"], rms_norm(x, p["norm1"], eps), cfg,
+            unroll=ctx.get("cost_mode", False)), aux
+    if kind == "mlstm":
+        return x + xlstm_mod.mlstm_forward(
+            p["mlstm"], rms_norm(x, p["norm1"], eps), cfg,
+            unroll=ctx.get("cost_mode", False)), aux
+    if kind == "slstm":
+        return x + xlstm_mod.slstm_forward(
+            p["slstm"], rms_norm(x, p["norm1"], eps), cfg,
+            cost_mode=ctx.get("cost_mode", False)), aux
+    if kind == "shared_attn":
+        sp = ctx["shared_params"]
+        h = rms_norm(x, p["norm1"], eps)
+        h = attn.attn_forward(sp["attn"], h, cfg, positions=ctx["positions"],
+                              causal=True,
+                              window=ctx.get("shared_window"),
+                              dense=ctx.get("cost_mode", False))
+        x = x + h
+        h = rms_norm(x, p["norm2"], eps)
+        return x + gated_mlp(h, sp["mlp"], cfg.act), aux
+    if kind == "xdec":
+        dense = ctx.get("cost_mode", False)
+        h = rms_norm(x, p["norm1"], eps)
+        x = x + attn.attn_forward(p["attn"], h, cfg,
+                                  positions=ctx["positions"], causal=True,
+                                  dense=dense)
+        h = rms_norm(x, p["norm_x"], eps)
+        x = x + attn.attn_forward(p["xattn"], h, cfg,
+                                  positions=ctx["positions"],
+                                  causal=False, kv=ctx["enc_out"],
+                                  dense=dense)
+        h = rms_norm(x, p["norm2"], eps)
+        return x + gated_mlp(h, p["mlp"], cfg.act), aux
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch, max_len, dtype):
+    if kind in ("dense", "dense_local", "moe", "shared_attn"):
+        win = cfg.sliding_window if kind == "dense_local" else None
+        alloc = min(max_len, win) if win else max_len
+        return attn.init_kv_cache(cfg, batch, alloc if False else max_len,
+                                  dtype)
+    if kind == "mla":
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+    if kind == "xdec":
+        return {"self": attn.init_kv_cache(cfg, batch, max_len, dtype),
+                "enc_out": None}  # filled at prefill
+    if kind == "enc_dense":
+        return {}
+    raise ValueError(kind)
+
+
+def block_decode(kind: str, p, x, cfg: ModelConfig, cache, ctx: dict):
+    eps = cfg.norm_eps
+    if kind in ("dense", "dense_local", "moe", "mla", "shared_attn"):
+        window = cfg.sliding_window if kind == "dense_local" else None
+        h = rms_norm(x, p["norm1"], eps)
+        if kind == "mla":
+            h, cache = attn.mla_decode(p["attn"], h, cfg, cache)
+        elif kind == "shared_attn":
+            h, cache = attn.attn_decode(ctx["shared_params"]["attn"], h, cfg,
+                                        cache,
+                                        window=ctx.get("shared_window"))
+        else:
+            h, cache = attn.attn_decode(p["attn"], h, cfg, cache,
+                                        window=window)
+        x = x + h
+        h = rms_norm(x, p["norm2"], eps)
+        if kind in ("moe", "mla"):
+            h, _ = moe_mod.moe_ffn(p["moe"], h, cfg, mesh=ctx.get("mesh"),
+                                   ep_axis=ctx.get("ep_axis"),
+                                   data_axes=ctx.get("data_axes", ()))
+        elif kind == "shared_attn":
+            h = gated_mlp(h, ctx["shared_params"]["mlp"], cfg.act)
+        else:
+            h = gated_mlp(h, p["mlp"], cfg.act)
+        return x + h, cache
+    if kind == "mamba":
+        h, cache = ssm_mod.mamba_decode(p["mamba"],
+                                        rms_norm(x, p["norm1"], eps), cfg,
+                                        cache)
+        return x + h, cache
+    if kind == "mlstm":
+        h, cache = xlstm_mod.mlstm_decode(p["mlstm"],
+                                          rms_norm(x, p["norm1"], eps), cfg,
+                                          cache)
+        return x + h, cache
+    if kind == "slstm":
+        h, cache = xlstm_mod.slstm_decode(p["slstm"],
+                                          rms_norm(x, p["norm1"], eps), cfg,
+                                          cache)
+        return x + h, cache
+    if kind == "xdec":
+        h = rms_norm(x, p["norm1"], eps)
+        h, self_c = attn.attn_decode(p["attn"], h, cfg, cache["self"])
+        x = x + h
+        h = rms_norm(x, p["norm_x"], eps)
+        x = x + attn.attn_forward(p["xattn"], h, cfg,
+                                  positions=jnp.zeros((1, 1)),
+                                  causal=False, kv=ctx["enc_out"])
+        h = rms_norm(x, p["norm2"], eps)
+        return x + gated_mlp(h, p["mlp"], cfg.act), \
+            {"self": self_c, "enc_out": None}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# The LM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: object = None
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    use_shard_map_embed: bool = True
+    remat: str = "none"              # none | dots | full
+    # cost mode: scan-free/unrolled FLOP-faithful lowering for the roofline
+    # pass (never executed; see repro.roofline docs)
+    cost_mode: bool = False
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, shard: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.shard = shard or ShardCtx()
+
+    # ---- init ----
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.jdtype
+        keys = jax.random.split(key, 8)
+        params = {
+            "embed": (jax.random.normal(keys[0],
+                                        (cfg.padded_vocab, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        pattern = cfg.block_pattern
+
+        def init_super(k):
+            kk = jax.random.split(k, len(pattern))
+            return tuple(init_block(kind, kk[i], cfg, dtype)
+                         for i, kind in enumerate(pattern))
+
+        supers = [init_super(jax.random.fold_in(keys[1], i))
+                  for i in range(cfg.n_super)]
+        params["scan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *supers)
+        params["rest"] = tuple(
+            init_block(kind, jax.random.fold_in(keys[2], i), cfg, dtype)
+            for i, kind in enumerate(cfg.remainder_pattern))
+        if "shared_attn" in pattern or "shared_attn" in cfg.remainder_pattern:
+            params["shared"] = {
+                "attn": attn.init_attn(keys[3], cfg, dtype),
+                "mlp": init_mlp(keys[4], cfg.d_model, cfg.d_ff, dtype),
+            }
+        if cfg.enc_layers:
+            enc = [init_block("enc_dense", jax.random.fold_in(keys[5], i),
+                              cfg, dtype) for i in range(cfg.enc_layers)]
+            params["enc_scan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+            params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        if cfg.modality != "text":
+            params["frontend_proj"] = jnp.eye(cfg.d_model, dtype=dtype)
+        return params
+
+    # ---- shared machinery ----
+    def _batch_axes(self, batch_size: int) -> tuple:
+        """Data axes the batch dim can actually shard over (empty when the
+        global batch is too small — e.g. long_500k's batch of 1)."""
+        sh = self.shard
+        if sh.mesh is None:
+            return ()
+        import numpy as _np
+        dsize = int(_np.prod([sh.mesh.shape[a] for a in sh.data_axes]))
+        return tuple(sh.data_axes) \
+            if batch_size % dsize == 0 and batch_size >= dsize else ()
+
+    def _ctx(self, params, positions, batch_size=None) -> dict:
+        sh = self.shard
+        return {
+            "positions": positions,
+            "mesh": sh.mesh,
+            "ep_axis": sh.model_axis if sh.mesh is not None else None,
+            "data_axes": (self._batch_axes(batch_size)
+                          if batch_size is not None else
+                          (sh.data_axes if sh.mesh is not None else ())),
+            "cost_mode": sh.cost_mode,
+            "shared_params": params.get("shared"),
+            "shared_window": (self.cfg.sliding_window
+                              if self.cfg.family == "hybrid" and
+                              not self.cfg.long_context_ok else None),
+        }
+
+    def _maybe_remat(self, f):
+        r = self.shard.remat
+        if r == "none":
+            return f
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if r == "dots" else None)
+        return jax.checkpoint(f, policy=policy)
+
+    def _stack(self, params, x, ctx):
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+
+        def super_step(carry, layer_params):
+            h, aux = carry
+            for i, kind in enumerate(pattern):
+                h, a = block_apply(kind, layer_params[i], h, cfg, ctx)
+                aux = aux + a
+            return (h, aux), None
+
+        step = self._maybe_remat(
+            lambda c, lp: super_step(c, lp))
+        (x, aux), _ = jax.lax.scan(
+            step, (x, jnp.zeros((), jnp.float32)), params["scan"],
+            unroll=cfg.n_super if self.shard.cost_mode else 1)
+        for i, kind in enumerate(cfg.remainder_pattern):
+            x, a = block_apply(kind, params["rest"][i], x, cfg, ctx)
+            aux = aux + a
+        return x, aux
+
+    def _encode(self, params, enc_embeds, ctx):
+        x = enc_embeds @ params["frontend_proj"]
+
+        def step(h, lp):
+            h, _ = block_apply("enc_dense", lp, h, self.cfg, ctx)
+            return h, None
+
+        x, _ = jax.lax.scan(self._maybe_remat(step), x, params["enc_scan"],
+                            unroll=(self.cfg.enc_layers
+                                    if self.shard.cost_mode else 1))
+        return rms_norm(x, params["enc_norm"], self.cfg.norm_eps)
+
+    # ---- forward / loss ----
+    def forward(self, params, batch: dict):
+        """batch: {tokens (B,S)} [+ frontend_embeds (B,Sf,D)] [+ enc_embeds].
+        Returns hidden states (B,S,D) after final norm."""
+        cfg = self.cfg
+        sh = self.shard
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        ba = self._batch_axes(b)
+        if sh.mesh is not None and sh.use_shard_map_embed:
+            x = ee.lookup(params["embed"], tokens, mesh=sh.mesh,
+                          vocab_axis=sh.model_axis,
+                          strategy=cfg.embed_strategy,
+                          data_axes=ba)
+        else:
+            x = ee.lookup(params["embed"], tokens, strategy="take")
+        if cfg.modality == "vision-stub" and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"] @ params["frontend_proj"]
+            x = jnp.concatenate([fe, x[:, fe.shape[1]:]], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.float32)[None],
+                                     (b, s))
+        ctx = self._ctx(params, positions, batch_size=b)
+        if cfg.enc_layers:
+            ctx["enc_out"] = self._encode(params, batch["enc_embeds"], ctx)
+        x, aux = self._stack(params, x, ctx)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+    def loss(self, params, batch: dict):
+        cfg = self.cfg
+        sh = self.shard
+        x, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if sh.mesh is not None:
+            ce = ee.xent_vocab_parallel(x, params["embed"], labels,
+                                        mesh=sh.mesh,
+                                        vocab_axis=sh.model_axis,
+                                        data_axes=self._batch_axes(
+                                            labels.shape[0]))
+        else:
+            lg = ee.logits(x, params["embed"])
+            ce = jnp.mean(jax.nn.logsumexp(lg, -1) -
+                          jnp.take_along_axis(lg, labels[..., None],
+                                              -1)[..., 0])
+        return ce + 0.01 * aux
+
+    # ---- serving ----
+    def init_caches(self, batch, max_len, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or cfg.jdtype
+        pattern = cfg.block_pattern
+
+        def one_super():
+            return tuple(init_block_cache(kind, cfg, batch, max_len, dtype)
+                         for kind in pattern)
+
+        caches = {
+            "scan": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[one_super() for _ in range(cfg.n_super)])
+            if cfg.n_super else (),
+            "rest": tuple(init_block_cache(k, cfg, batch, max_len, dtype)
+                          for k in cfg.remainder_pattern),
+        }
+        return caches
+
+    def prefill(self, params, batch: dict, caches):
+        """Run the full-seq forward and (for simplicity of the runtime) fill
+        caches by replaying tokens through decode in the serving loop; the
+        dry-run lowers `serve_step` = one decode step, which is the shape
+        that matters.  Here: returns last-position hidden state."""
+        x, _ = self.forward(params, batch)
+        return x[:, -1:]
+
+    def decode_step(self, params, tokens_new, caches, batch_ctx=None):
+        """tokens_new (B,1) -> (logits (B,1,V-sharded…), caches)."""
+        cfg = self.cfg
+        sh = self.shard
+        if sh.mesh is not None and sh.use_shard_map_embed:
+            x = ee.lookup(params["embed"], tokens_new, mesh=sh.mesh,
+                          vocab_axis=sh.model_axis,
+                          strategy=cfg.embed_strategy,
+                          data_axes=self._batch_axes(tokens_new.shape[0]))
+        else:
+            x = ee.lookup(params["embed"], tokens_new, strategy="take")
+        ctx = self._ctx(params, None, batch_size=tokens_new.shape[0])
+        if cfg.enc_layers:
+            ctx["enc_out"] = batch_ctx["enc_out"]
+        pattern = cfg.block_pattern
+
+        def super_step(h, xs):
+            layer_params, layer_cache = xs
+            new_caches = []
+            for i, kind in enumerate(pattern):
+                h, nc = block_decode(kind, layer_params[i], h, cfg,
+                                     layer_cache[i], ctx)
+                new_caches.append(nc)
+            return h, tuple(new_caches)
+
+        if cfg.n_super:
+            x, new_scan = jax.lax.scan(
+                super_step, x, (params["scan"], caches["scan"]),
+                unroll=cfg.n_super if self.shard.cost_mode else 1)
+        else:
+            new_scan = ()
+        new_rest = []
+        for i, kind in enumerate(cfg.remainder_pattern):
+            x, nc = block_decode(kind, params["rest"][i], x, cfg,
+                                 caches["rest"][i], ctx)
+            new_rest.append(nc)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = ee.logits(x, params["embed"])[..., :cfg.vocab_size]
+        return logits, {"scan": new_scan, "rest": tuple(new_rest)}

@@ -1,0 +1,112 @@
+"""Mamba2 (SSD) block — chunked state-space scan.
+
+The SSD chunked-parallel algorithm: within a chunk the recurrence is
+materialized as a (lower-triangular) attention-like contraction; across
+chunks a short ``lax.scan`` carries the (H, P, N) state.  Chunking keeps the
+sequential scan length at S/chunk (e.g. 2048 steps for the 500k shape) and
+the HLO size O(1), while the per-step state is O(1) in sequence length —
+this is why the ``long_500k`` cell runs for SSM/hybrid archs and is skipped
+for full attention (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    d_inner = 2 * d
+    h = cfg.num_heads
+    p_head = d_inner // h
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj: x, z(gate), B, C, dt
+        "w_in": dense_init(ks[0], (d, d_inner * 2 + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (4, d_inner), dtype, scale=0.5),
+        "A_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.arange(1, h + 1)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d), dtype),
+        "norm_z": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk, unroll=False):
+    """Chunked SSD scan via the shared gated-linear core.
+
+    x (b,s,h,p); dt (b,s,h); A (h,) <0; B,C (b,s,n) (single group).
+    """
+    from .linear_scan import gated_linear_scan
+    b, s, h, p = x.shape
+    a = dt * A[None, None, :]
+    Bh = jnp.broadcast_to(B[:, :, None, :], (b, s, h, B.shape[-1]))
+    Ch = jnp.broadcast_to(C[:, :, None, :], (b, s, h, C.shape[-1]))
+    y, _ = gated_linear_scan(x, a, dt, Bh, Ch, chunk, unroll=unroll)
+    return y
+
+
+def mamba_forward(p, x, cfg: ModelConfig, unroll=False):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    d_inner = 2 * d
+    ph = d_inner // h
+    n = cfg.ssm_state
+    proj = x @ p["w_in"]
+    xz, rest = proj[..., :2 * d_inner], proj[..., 2 * d_inner:]
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+    Bm, Cm, dt = rest[..., :n], rest[..., n:2 * n], rest[..., 2 * n:]
+    # causal depthwise conv (kernel 4)
+    xpad = jnp.pad(xi, ((0, 0), (3, 0), (0, 0)))
+    xconv = sum(xpad[:, i:i + s] * p["conv_w"][i][None, None, :]
+                for i in range(4))
+    xconv = jax.nn.silu(xconv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xconv.reshape(b, s, h, ph)
+    from .common import pick_chunk
+    chunk = pick_chunk(s, min(cfg.ssm_chunk, s))
+    y = _ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                     Cm.astype(jnp.float32), chunk, unroll=unroll)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def mamba_decode(p, x, cfg: ModelConfig, cache):
+    """Single-step recurrence. cache: {state (b,h,p,n), conv (b,3,d_inner)}."""
+    b, _, d = x.shape
+    h = cfg.num_heads
+    d_inner = 2 * d
+    ph = d_inner // h
+    n = cfg.ssm_state
+    proj = (x[:, 0] @ p["w_in"])
+    xi, z = proj[..., :d_inner], proj[..., d_inner:2 * d_inner]
+    rest = proj[..., 2 * d_inner:]
+    Bm, Cm, dt = rest[..., :n], rest[..., n:2 * n], rest[..., 2 * n:]
+    conv_in = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # (b,4,di)
+    xconv = jnp.einsum("bkd,kd->bd", conv_in, p["conv_w"])
+    xconv = jax.nn.silu(xconv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (b,h)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                                 # (b,h)
+    xh = xconv.reshape(b, h, ph)
+    S = cache["state"] * decay[:, :, None, None].astype(x.dtype) + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt.astype(x.dtype), xh, Bm)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, S) + \
+        xh * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, d_inner) * jax.nn.silu(z)
+    out = (y @ p["w_out"])[:, None]
+    new_cache = {"state": S, "conv": conv_in[:, 1:]}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype):
+    d_inner = 2 * cfg.d_model
+    ph = d_inner // cfg.num_heads
+    return {"state": jnp.zeros((batch, cfg.num_heads, ph, cfg.ssm_state),
+                               dtype),
+            "conv": jnp.zeros((batch, 3, d_inner), dtype)}

@@ -1,0 +1,188 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunk-parallel)
+and sLSTM (scalar memory, recurrent).
+
+mLSTM is the gated-linear recurrence
+
+    C_t = f_t · C_{t-1} + i_t · v_t k_tᵀ ;   n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t · q_t|, 1)
+
+and reuses :mod:`repro.models.linear_scan` (the denominator runs through the
+same scan with p=1).  Gates are stabilized in log space.  sLSTM keeps
+per-head scalar cells with exponential gating and a block-diagonal recurrent
+matrix — inherently sequential, expressed as a ``lax.scan`` over time.
+
+Both blocks are self-contained (cfg.d_ff == 0): they own their up/down
+projections, as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+from .linear_scan import gated_linear_scan, gated_linear_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "w_if": dense_init(ks[3], (d, 2 * h), jnp.float32, scale=0.02),
+        "b_i": jnp.full((h,), -3.0, jnp.float32),   # small initial write
+        "b_f": jnp.full((h,), 3.0, jnp.float32),    # long initial memory
+        "w_gate": dense_init(ks[4], (d, d), dtype),
+        "wo": dense_init(ks[5], (d, d), dtype),
+    }
+
+
+def _mlstm_gates(p, x):
+    g = x.astype(jnp.float32) @ p["w_if"]
+    h = p["b_i"].shape[0]
+    log_i = g[..., :h] + p["b_i"]                     # log input gate
+    log_f = jax.nn.log_sigmoid(g[..., h:] + p["b_f"])  # log forget gate
+    return log_i, log_f
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, unroll=False):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(b, s, h, hd) * hd ** -0.5
+    k = (x @ p["wk"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    log_i, log_f = _mlstm_gates(p, x)
+    # input-gate bias starts at -3 so exp(log_i) stays small; the max(|n·q|,1)
+    # denominator provides the remaining stabilization (paper App. A)
+    scale = jnp.exp(jnp.minimum(log_i, 4.0))
+    from .common import pick_chunk
+    chunk = pick_chunk(s, min(cfg.ssm_chunk, s))
+    num, _ = gated_linear_scan(v, log_f, scale, k, q, chunk, unroll=unroll)
+    ones = jnp.ones((b, s, h, 1), x.dtype)
+    den, _ = gated_linear_scan(ones, log_f, scale, k, q, chunk,
+                               unroll=unroll)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(b, s, d) * jax.nn.silu(x @ p["w_gate"])
+    return y @ p["wo"]
+
+
+def mlstm_decode(p, x, cfg: ModelConfig, cache):
+    """cache: {C (b,h,hd,hd), n (b,h,1,hd)}  (state is O(1) in seq len)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    xt = x[:, 0]
+    q = (xt @ p["wq"]).reshape(b, h, hd) * hd ** -0.5
+    k = (xt @ p["wk"]).reshape(b, h, hd) * hd ** -0.5
+    v = (xt @ p["wv"]).reshape(b, h, hd)
+    log_i, log_f = _mlstm_gates(p, xt)
+    scale = jnp.exp(jnp.minimum(log_i, 4.0))
+    num, C = gated_linear_step(cache["C"], v, log_f, scale, k, q)
+    ones = jnp.ones((b, h, 1), x.dtype)
+    den, n = gated_linear_step(cache["n"], ones, log_f, scale, k, q)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(b, d) * jax.nn.silu(xt @ p["w_gate"])
+    return (y @ p["wo"])[:, None], {"C": C, "n": n}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch, dtype):
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    return {"C": jnp.zeros((batch, h, hd, hd), dtype),
+            "n": jnp.zeros((batch, h, 1, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype),        # z,i,f,o preacts
+        "r": dense_init(ks[1], (h, hd, 4 * hd), dtype, scale=0.3 * hd ** -0.5),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.full((d,), 3.0),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "wo": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_cell(p, cfg, carry, wx_t):
+    """One sLSTM step. carry: (h_prev, c, n, m) each (b, d) [m in fp32]."""
+    d, nh = cfg.d_model, cfg.num_heads
+    hd = d // nh
+    h_prev, c, n, m = carry
+    b = h_prev.shape[0]
+    rh = jnp.einsum("bhd,hde->bhe", h_prev.reshape(b, nh, hd),
+                    p["r"]).reshape(b, 4 * d)
+    pre = (wx_t + rh).astype(jnp.float32) + p["b"]
+    z, i_t, f_t, o = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)               # stabilizer
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new.astype(wx_t.dtype), c_new, n_new, m_new), h_new
+
+
+def slstm_forward(p, x, cfg: ModelConfig, cost_mode=False):
+    b, s, d = x.shape
+    wx = x @ p["w_in"]                                 # (b,s,4d)
+    if cost_mode:
+        return _slstm_flops_equivalent(p, x, wx, cfg)
+    carry = (jnp.zeros((b, d), x.dtype),) + tuple(
+        jnp.zeros((b, d), jnp.float32) for _ in range(3))
+    carry, hs = jax.lax.scan(
+        lambda cr, t: _slstm_cell(p, cfg, cr, t), carry,
+        jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return y @ p["wo"]
+
+
+def _slstm_flops_equivalent(p, x, wx, cfg):
+    """COST-MODE ONLY: numerically wrong but FLOP-identical stand-in for
+    the sequential sLSTM scan (XLA counts scan bodies once; roofline docs).
+    The recurrent block-diagonal matmul and gate arithmetic run once per
+    timestep, batched over S."""
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    h_fake = x.reshape(b, s, nh, hd)
+    rh = jnp.einsum("bshd,hde->bshe", h_fake, p["r"]).reshape(b, s, 4 * d)
+    pre = (wx + rh).astype(jnp.float32) + p["b"]
+    z, i_t, f_t, o = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m = jnp.maximum(log_f, i_t)
+    c = jnp.exp(log_f + m) + jnp.exp(i_t - m) * jnp.tanh(z)
+    n = jnp.exp(log_f) + jnp.exp(i_t - m)
+    y = (jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)).astype(x.dtype)
+    return y @ p["wo"]
+
+
+def slstm_decode(p, x, cfg: ModelConfig, cache):
+    wx = (x[:, 0] @ p["w_in"])
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    carry, h_new = _slstm_cell(p, cfg, carry, wx)
+    y = (h_new.astype(x.dtype) @ p["wo"])[:, None]
+    return y, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}

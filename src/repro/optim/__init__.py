@@ -1,0 +1,6 @@
+from .adamw import adamw, apply_updates, clip_by_global_norm
+from .schedule import cosine_schedule
+from .compress import compress_gradients, error_feedback_init
+
+__all__ = ["adamw", "apply_updates", "clip_by_global_norm",
+           "cosine_schedule", "compress_gradients", "error_feedback_init"]

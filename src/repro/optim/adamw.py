@@ -1,0 +1,77 @@
+"""AdamW with optional ZeRO-1 sharding of optimizer state.
+
+Self-contained (no optax in this container).  State dtype is fp32
+regardless of param dtype (bf16-safe master moments); ``zero_axes`` shards
+the moments over the data axes (ZeRO-1) — with GSPMD that is expressed by
+sharding constraints on the state pytree, applied in
+``repro.launch.sharding.opt_state_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: object = 3e-4            # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip:
+            grads = clip_by_global_norm(grads, self.grad_clip)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+        def upd(m, v, p):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step, mu, nu)
+
+
+def adamw(**kw) -> AdamW:
+    return AdamW(**kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads)

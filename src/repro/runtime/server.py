@@ -1,0 +1,95 @@
+"""Batched decode server.
+
+Continuous-batching-lite: a fixed decode batch of slots; finished sequences
+(EOS or length limit) are replaced by queued requests between steps.  The
+KV caches are slot-indexed, so admission is a per-slot cache reset + prompt
+prefill-by-decode (prompt tokens replayed through ``decode_step`` — one
+code path, which is also exactly the ``serve_step`` the dry-run lowers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (L,) int32
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, lm, params, *, batch_slots: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None):
+        self.lm = lm
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.queue: deque = deque()
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self._pending_prompt: List[deque] = [deque()
+                                             for _ in range(batch_slots)]
+        self.caches = lm.init_caches(batch_slots, max_len)
+        self._step = jax.jit(lm.decode_step)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        # wave batching: the cache `len` counter is shared across slots, so
+        # new requests are admitted only when the whole batch drained (the
+        # caches are then re-zeroed).  Per-slot position counters — true
+        # continuous batching — are a documented extension point.
+        if any(self.active) or not self.queue:
+            return
+        self.caches = self.lm.init_caches(self.slots, self.max_len)
+        for i in range(self.slots):
+            if self.queue:
+                req = self.queue.popleft()
+                self.active[i] = req
+                self._pending_prompt[i] = deque(req.prompt.tolist())
+
+    def step(self) -> int:
+        """One decode step for the whole batch; returns #active."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._pending_prompt[i]:
+                tokens[i, 0] = self._pending_prompt[i].popleft()
+            elif req.out:
+                tokens[i, 0] = req.out[-1]
+            else:
+                tokens[i, 0] = req.prompt[-1]
+        logits, self.caches = self._step(self.params, jnp.asarray(tokens),
+                                         self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._pending_prompt[i]:
+                continue  # still prefill-replaying the prompt
+            req.out.append(int(nxt[i]))
+            if (self.eos is not None and req.out[-1] == self.eos) or \
+                    len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.active[i] = None
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+reduced same-family config, runs one forward + one train step on CPU with
+shape and finiteness assertions — plus decode-parity tests for the
+recurrent families (chunked/parallel training path ≡ sequential decode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.models import LM
+from repro.optim import adamw, apply_updates
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    out = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size),
+           "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size)}
+    if cfg.modality == "audio-stub":
+        out["enc_embeds"] = jax.random.normal(k3, (b, s, cfg.d_model))
+    if cfg.modality == "vision-stub":
+        out["frontend_embeds"] = jax.random.normal(k3, (b, 8, cfg.d_model))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates(arch):
+    """The paper-exact config is structurally sound (abstract init only)."""
+    cfg = get_config(arch)
+    lm = LM(cfg)
+    shapes = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    n_params = sum(np.prod(l.shape) for l in jax.tree.leaves(shapes))
+    assert n_params > 1e8, (arch, n_params)  # all assigned archs are ≥1B-ish
+    assert cfg.num_layers == cfg.n_super * len(cfg.block_pattern) + \
+        len(cfg.remainder_pattern)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    x, aux = lm.forward(params, batch)
+    assert x.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.isfinite(x).all()), arch
+
+    opt = adamw(lr=1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(lm.loss)(p, b)
+        u, o = opt.update(g, o, p)
+        return apply_updates(p, u), o, loss
+
+    p1, o1, loss = step(params, opt_state, batch)
+    assert np.isfinite(float(loss)), arch
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(p1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    caches = lm.init_caches(2, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    ctx = None
+    if cfg.enc_layers:
+        ctx = {"enc_out": jax.random.normal(jax.random.PRNGKey(1),
+                                            (2, 16, cfg.d_model))}
+    logits, caches2 = lm.decode_step(params, tok, caches, batch_ctx=ctx)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    # cache structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-7b"])
+def test_recurrent_forward_matches_decode(arch):
+    """Chunk-parallel training path ≡ sequential decode (the invariant that
+    makes long_500k serving trustworthy for the sub-quadratic archs)."""
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    s = 12
+    batch = _batch(cfg, b=2, s=s, seed=3)
+    hs, _ = lm.forward(params, batch)
+
+    caches = lm.init_caches(2, s + 4)
+    outs = []
+    from repro.core.embedding_engine import logits as unembed
+    for t in range(s):
+        lg, caches = lm.decode_step(params, batch["tokens"][:, t:t + 1],
+                                    caches)
+        outs.append(lg)
+    lg_fwd = unembed(hs, params["embed"])
+    lg_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(lg_dec, np.float32),
+                               np.asarray(lg_fwd, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_cost_mode_flop_parity_shapes():
+    """Cost-mode (dense/unrolled) lowering produces the same output shapes
+    as the production path (it is a lowering-only artifact)."""
+    from repro.models import ShardCtx
+    cfg = get_reduced("stablelm-3b")
+    lm_prod = LM(cfg)
+    lm_cost = LM(cfg, ShardCtx(cost_mode=True))
+    params = jax.eval_shape(lm_prod.init, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+    a = jax.eval_shape(lm_prod.loss, params, batch)
+    b = jax.eval_shape(lm_cost.loss, params, batch)
+    assert a.shape == b.shape == ()
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.models import moe as moe_mod
+    cfg = get_reduced("qwen3-moe-235b-a22b")
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    out, aux = moe_mod.moe_ffn_local(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) > 0.5  # aux ≈ 1 for near-uniform routing
+
+
+def test_int8_kv_cache_decode_parity():
+    """Beyond-paper serving optimization: int8 block-scaled KV cache.
+    Greedy decode must agree with the bf16 cache (and the cache must be
+    ≥3× smaller)."""
+    import dataclasses
+    cfg = get_reduced("stablelm-3b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    lm, lm8 = LM(cfg), LM(cfg8)
+    params = lm.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                              cfg.vocab_size)
+    c, c8 = lm.init_caches(2, 16), lm8.init_caches(2, 16)
+    outs, outs8 = [], []
+    for t in range(10):
+        lg, c = lm.decode_step(params, toks[:, t:t + 1], c)
+        lg8, c8 = lm8.decode_step(params, toks[:, t:t + 1], c8)
+        outs.append(lg)
+        outs8.append(lg8)
+    a = jnp.concatenate(outs, 1)
+    b = jnp.concatenate(outs8, 1)
+    agree = float((jnp.argmax(a, -1) == jnp.argmax(b, -1)).mean())
+    assert agree > 0.95, agree
+    nb = sum(x.nbytes for x in jax.tree.leaves(c))
+    nb8 = sum(x.nbytes for x in jax.tree.leaves(c8))
+    assert nb8 * 3 < nb, (nb, nb8)

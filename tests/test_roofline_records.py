@@ -1,0 +1,41 @@
+"""Deliverable-e gate as a test: the dry-run record set must be complete —
+every (arch × shape × mesh) cell either compiled OK or is a documented
+skip.  Runs only when the sweep artifacts exist (they are committed under
+experiments/dryrun)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import list_archs
+from repro.launch.steps import SHAPES
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+@pytest.mark.skipif(not DRYRUN.exists() or
+                    len(list(DRYRUN.glob("*__single.json"))) < 40,
+                    reason="dry-run sweep artifacts not present")
+@pytest.mark.parametrize("mesh", ["single", "multipod"])
+def test_dryrun_matrix_complete(mesh):
+    for arch in list_archs():
+        for shape in SHAPES:
+            f = DRYRUN / f"{arch}__{shape}__{mesh}.json"
+            assert f.exists(), f"missing cell {arch}×{shape}×{mesh}"
+            rec = json.loads(f.read_text())
+            assert rec["status"] in ("ok", "skipped"), \
+                (arch, shape, mesh, rec.get("error"))
+            if rec["status"] == "skipped":
+                assert shape == "long_500k"
+                assert "sub-quadratic" in rec["reason"]
+
+
+@pytest.mark.skipif(not DRYRUN.exists() or
+                    len(list(DRYRUN.glob("*__single.json"))) < 40,
+                    reason="dry-run sweep artifacts not present")
+def test_dryrun_long500k_runs_for_subquadratic():
+    for arch in ("xlstm-1.3b", "zamba2-7b"):
+        for mesh in ("single", "multipod"):
+            rec = json.loads(
+                (DRYRUN / f"{arch}__long_500k__{mesh}.json").read_text())
+            assert rec["status"] == "ok", (arch, mesh, rec.get("error"))
