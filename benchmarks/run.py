@@ -23,6 +23,13 @@ def main() -> None:
         mod = __import__(f"benchmarks.bench_{b}", fromlist=["run"])
         mod.run(report)
 
+    # global compile-cache effectiveness across everything the run compiled
+    from repro.core.pipeline import compile_cache_stats
+    stats = compile_cache_stats()
+    report("compile_cache/hits", 0, stats["hits"])
+    report("compile_cache/misses", 0, stats["misses"])
+    report("compile_cache/hit_rate", 0, round(stats["hit_rate"], 3))
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification entrypoint (the ROADMAP command, with PYTHONPATH set).
+#
+#   scripts/tier1.sh            # exactly the ROADMAP tier-1 run
+#   scripts/tier1.sh --fast     # + no cacheprovider (clean CI workspaces)
+#   scripts/tier1.sh [pytest args...]   # extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+EXTRA=()
+if [[ "${1:-}" == "--fast" ]]; then
+  EXTRA+=(-p no:cacheprovider)
+  shift
+fi
+exec python -m pytest -x -q "${EXTRA[@]}" "$@"

@@ -16,8 +16,10 @@ from .ops import EmbeddingOp
 
 def execute(op: EmbeddingOp, inputs: dict) -> jnp.ndarray:
     if op.kind == "gather":
-        return ref.block_gather(jnp.asarray(inputs["table"]),
-                                jnp.asarray(inputs["idxs"]),
+        idxs = jnp.asarray(inputs["idxs"])
+        if "roff" in inputs:   # fused multi-table: per-segment table base
+            idxs = idxs + jnp.asarray(inputs["roff"], jnp.int32)
+        return ref.block_gather(jnp.asarray(inputs["table"]), idxs,
                                 block_rows=op.block_rows)
     if op.kind == "kg":
         seg = np.arange(op.num_segments, dtype=np.int32)
@@ -32,7 +34,10 @@ def execute(op: EmbeddingOp, inputs: dict) -> jnp.ndarray:
                            jnp.asarray(inputs["idxs"]), jnp.asarray(seg),
                            num_segments=op.num_segments)
     w = inputs.get("vals")
-    return ref.sls(jnp.asarray(inputs["table"]), jnp.asarray(inputs["idxs"]),
+    idxs = np.asarray(inputs["idxs"])
+    if "roff" in inputs:       # fused multi-table: rebase per lookup
+        idxs = idxs + np.asarray(inputs["roff"], np.int64)[seg]
+    return ref.sls(jnp.asarray(inputs["table"]), jnp.asarray(idxs),
                    jnp.asarray(seg),
                    None if w is None else jnp.asarray(w),
                    num_segments=op.num_segments,

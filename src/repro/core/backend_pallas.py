@@ -29,7 +29,8 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .ops import EmbeddingOp
-from .pipeline import CompileResult
+from .pipeline import (CompileResult, ProgramCompileResult, opt_level_index)
+from .passes import fuse_inputs, split_outputs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,10 +41,16 @@ class KernelPlan:
     aligned: bool           # queue alignment: padded rows, no id marshaling
     store_stream: bool      # §7.4 pure-copy path
     num_buffers: int = 2    # DMA pipeline depth (the queue depth)
+    num_tables: int = 1     # >1: batched multi-table plan (stacked table +
+                            # scalar-prefetched per-segment base stream)
 
     @property
     def vmem_bytes_per_buffer(self) -> int:
         return self.col_tile * 4 * self.num_buffers
+
+    @property
+    def batched(self) -> bool:
+        return self.num_tables > 1
 
 
 def make_plan(res: CompileResult) -> KernelPlan:
@@ -59,6 +66,7 @@ def make_plan(res: CompileResult) -> KernelPlan:
         whole_row_dma=bool(opt.get("bufferized")),
         aligned=bool(opt.get("queue_aligned")),
         store_stream=bool(opt.get("store_streams")),
+        num_tables=res.op.num_tables,
     )
 
 
@@ -67,9 +75,12 @@ def execute(res: CompileResult, inputs: dict, interpret: bool = True):
     op = res.op
     plan = make_plan(res)
     if op.kind == "gather":
-        assert plan.store_stream or res.opt_level < "O3"
-        return kops.block_gather(jnp.asarray(inputs["table"]),
-                                 jnp.asarray(inputs["idxs"]),
+        assert plan.store_stream or opt_level_index(res.opt_level) < 3
+        idxs = jnp.asarray(inputs["idxs"])
+        if plan.batched and "roff" in inputs:
+            # table-offset stream: rebase is scalar index math ahead of DMA
+            idxs = idxs + jnp.asarray(inputs["roff"], jnp.int32)
+        return kops.block_gather(jnp.asarray(inputs["table"]), idxs,
                                  block_rows=op.block_rows,
                                  interpret=interpret)
     if op.kind == "fusedmm":
@@ -86,13 +97,39 @@ def execute(res: CompileResult, inputs: dict, interpret: bool = True):
         ptrs = _ptrs_of(op, inputs)
         w = inputs.get("vals")
     col_tile = plan.col_tile if plan.whole_row_dma else 128
+    seg_base = None
+    if plan.batched and "roff" in inputs:
+        seg_base = jnp.asarray(inputs["roff"], jnp.int32)
     return kops.sls(jnp.asarray(inputs["table"]), jnp.asarray(ptrs),
                     jnp.asarray(inputs["idxs"]),
                     None if w is None else jnp.asarray(w),
                     num_segments=op.num_segments,
                     max_lookups=kops.max_lookups_of(ptrs),
                     add_op=op.semiring.add, mul_op=op.semiring.mul,
-                    col_tile=col_tile, interpret=interpret)
+                    col_tile=col_tile, interpret=interpret,
+                    seg_base=seg_base)
+
+
+def execute_program(pres: ProgramCompileResult, inputs: dict,
+                    interpret: bool = True) -> dict:
+    """Run a compiled program on the Pallas backend.
+
+    ``inputs`` maps op name -> concrete inputs.  Fused units execute ONE
+    batched kernel launch over the stacked table (one scalar-prefetch access
+    stream instead of per-table dispatches) and split the output rows back
+    per member op.
+    """
+    outs: dict = {}
+    for unit in pres.units:
+        if unit.group is None:
+            outs[unit.names[0]] = execute(unit.result,
+                                          inputs[unit.names[0]],
+                                          interpret=interpret)
+        else:
+            fused = execute(unit.result, fuse_inputs(unit.group, inputs),
+                            interpret=interpret)
+            outs.update(split_outputs(unit.group, fused))
+    return outs
 
 
 def _round_up(x: int, m: int) -> int:

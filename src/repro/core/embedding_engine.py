@@ -18,9 +18,15 @@ the target):
 ``masked_psum_scatter``  same but reduce-scatters the result over the
                   sequence axis (sequence parallelism) — halves the
                   collective bytes when the consumer is seq-sharded;
-``pallas``        the DAE SLS kernel (single-device TPU runtime path).
+``pallas``        the emberc-compiled DAE gather kernel (single-device TPU
+                  runtime path) — compiled through the *program-level*
+                  pipeline, so repeated lookups of the same shape are
+                  compile-cache hits.
 
-The engine also exposes the cost-model-driven chooser used by configs.
+The engine also builds the :class:`~repro.core.ops.EmbeddingProgram` that
+describes ALL of a model step's irregular lookups (token embedding + the
+vocab-parallel label gather + optional MoE dispatch), which the runtimes
+compile once and reuse across steps (:func:`model_embedding_program`).
 """
 from __future__ import annotations
 
@@ -29,7 +35,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
+
+from .ops import EmbeddingOp, EmbeddingProgram, single_op_program
 
 
 def choose_strategy(vocab_size: int, sharded: bool) -> str:
@@ -62,7 +71,47 @@ def lookup(table: jax.Array, ids: jax.Array, *, mesh=None,
         assert mesh is not None and vocab_axis is not None
         return _masked_lookup(table, ids, mesh, vocab_axis, data_axes,
                               seq_scatter or strategy.endswith("scatter"))
+    if strategy == "pallas":
+        return _pallas_lookup(table, ids)
     raise ValueError(strategy)
+
+
+def _pallas_lookup(table, ids):
+    """Single-device DAE path: compile (cached) + run the gather kernel."""
+    from . import backend_pallas as bp
+    from .pipeline import compile_program
+    from ..kernels.ops import default_interpret
+    n_tok = int(np.prod(ids.shape))
+    op = EmbeddingOp("gather", num_segments=n_tok,
+                     num_embeddings=int(table.shape[0]),
+                     emb_len=int(table.shape[1]))
+    pres = compile_program(single_op_program(op, "lookup"), "O3")
+    out = bp.execute(pres.units[0].result,
+                     {"table": table, "idxs": ids.reshape(-1)},
+                     interpret=default_interpret())
+    return out.reshape(*ids.shape, table.shape[1])
+
+
+def model_embedding_program(*, vocab_size: int, d_model: int, tokens: int,
+                            extra_ops: tuple = (),
+                            name: str = "model-step") -> EmbeddingProgram:
+    """The irregular-lookup program of one model step.
+
+    Token embedding and the label-logit gather of the vocab-parallel cross
+    entropy both read the embed table — annotated as a shared table so the
+    fusion pass stacks it once; ``extra_ops`` appends model-specific lookups
+    (e.g. :func:`repro.models.moe.dispatch_op`).  The result is what
+    runtimes hand to :func:`repro.core.pipeline.compile_program`, whose
+    cache makes per-step recompiles free.
+    """
+    ops = (("tok_embed",
+            EmbeddingOp("gather", num_segments=tokens,
+                        num_embeddings=vocab_size, emb_len=d_model)),
+           ("label_gather",
+            EmbeddingOp("gather", num_segments=tokens,
+                        num_embeddings=vocab_size, emb_len=d_model)))
+    return EmbeddingProgram(name, ops + tuple(extra_ops),
+                            shared_tables=(("tok_embed", "label_gather"),))
 
 
 def _masked_lookup(table, ids, mesh, vocab_axis, data_axes, seq_scatter):

@@ -75,6 +75,11 @@ class EmbeddingOp:
     # CSR variants: "offsets" (ptrs array) or "lengths" (per-segment counts;
     # lowered with an access-unit accumulation stream, paper §7.4)
     index_format: str = "offsets"
+    # >1 marks a *fused* multi-table op (produced by the program-level fusion
+    # pass): the table memref is the row-stacked concatenation of the member
+    # tables and an extra read-only per-segment base array ``roff`` carries
+    # the table-offset stream (row units; block units for 'gather').
+    num_tables: int = 1
 
     # ---- structural properties used by characterization + cost model ----
     @property
@@ -177,6 +182,8 @@ def reference(op: EmbeddingOp, inputs: dict) -> np.ndarray:
 
     if op.kind == "gather":
         idxs = inputs["idxs"]
+        if "roff" in inputs:          # fused multi-table: per-segment base
+            idxs = idxs + inputs["roff"]
         table = inputs["table"]
         rows = (idxs[:, None] * op.block_rows + np.arange(op.block_rows)[None, :])
         return table[rows]  # (g, r, e)
@@ -205,10 +212,12 @@ def reference(op: EmbeddingOp, inputs: dict) -> np.ndarray:
 
     table = inputs["table"]
     vals = inputs.get("vals")
+    roff = inputs.get("roff")
     out = np.full((op.num_segments, op.emb_len), sr.identity, dt)
     for b in range(op.num_segments):
+        base = int(roff[b]) if roff is not None else 0
         for p in range(ptrs[b], ptrs[b + 1]):
-            v = table[idxs[p]]
+            v = table[idxs[p] + base]
             if vals is not None:
                 v = sr.np_mul(v, vals[p])
             out[b] = sr.np_add(out[b], v)
@@ -217,3 +226,97 @@ def reference(op: EmbeddingOp, inputs: dict) -> np.ndarray:
         seg_lens = np.diff(ptrs)
         out[seg_lens == 0] = 0.0
     return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Program-level frontend: an ordered set of named embedding operations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingProgram:
+    """All irregular lookups of one model step, compiled as a unit.
+
+    A model step is never a single :class:`EmbeddingOp` — a DLRM step does
+    one SLS per embedding table, an LM step does token embedding + the label
+    gather of the vocab-parallel cross entropy + (for MoE) expert dispatch.
+    Compiling them together lets the pass manager fuse compatible lookups
+    into one DAE schedule (one access stream over stacked tables) and lets
+    the runtime reuse the compiled artifact across steps via the compile
+    cache (keyed on :meth:`signature`).
+
+    ``ops``            ordered tuple of ``(name, EmbeddingOp)``;
+    ``shared_tables``  tuples of op names whose table memref is the *same*
+                       array (e.g. token embedding and the unembedding label
+                       gather both read the embed table) — the fusion pass
+                       stacks a shared table once.
+    """
+
+    name: str
+    ops: tuple                       # of (name, EmbeddingOp)
+    shared_tables: tuple = ()        # of tuple[str, ...]
+
+    def __post_init__(self):
+        names = [n for n, _ in self.ops]
+        assert len(names) == len(set(names)), f"duplicate op names: {names}"
+        known = set(names)
+        for group in self.shared_tables:
+            for n in group:
+                assert n in known, f"shared_tables references unknown op {n!r}"
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def names(self) -> tuple:
+        return tuple(n for n, _ in self.ops)
+
+    def op(self, name: str) -> EmbeddingOp:
+        return dict(self.ops)[name]
+
+    def signature(self) -> tuple:
+        """Hashable structural identity — the compile-cache key component.
+
+        Deliberately excludes ``name``: two programs with identical op
+        structure compile to identical artifacts and must share a cache
+        entry (e.g. every decode step of every server replica).
+        """
+        return (tuple(self.ops),
+                tuple(tuple(g) for g in self.shared_tables))
+
+    def table_slot(self, name: str):
+        """Canonical table identity for ``name`` (shared group or self)."""
+        for group in self.shared_tables:
+            if name in group:
+                return ("shared",) + tuple(group)
+        return ("own", name)
+
+
+def single_op_program(op: EmbeddingOp, name: str = "op") -> EmbeddingProgram:
+    return EmbeddingProgram(name, ((name, op),))
+
+
+def make_program_inputs(prog: EmbeddingProgram, seed: int = 0,
+                        alpha: Optional[float] = None) -> dict:
+    """Per-op concrete inputs; ops in a shared-table group get the *same*
+    table array (shape-checked), mirroring a real model's aliased tables."""
+    inputs: dict = {}
+    shared_cache: dict = {}
+    for i, (name, op) in enumerate(prog.ops):
+        ins = make_inputs(op, seed=seed + i, alpha=alpha)
+        slot = prog.table_slot(name)
+        tbl_key = "x" if op.kind == "fusedmm" else "table"
+        if slot[0] == "shared":
+            if slot in shared_cache:
+                prev = shared_cache[slot]
+                assert prev.shape == ins[tbl_key].shape, \
+                    f"shared tables of {slot} disagree in shape"
+                ins[tbl_key] = prev
+            else:
+                shared_cache[slot] = ins[tbl_key]
+        inputs[name] = ins
+    return inputs
+
+
+def program_reference(prog: EmbeddingProgram, inputs: dict) -> dict:
+    """Composed numpy oracle: per-op reference outputs, keyed by op name."""
+    return {name: reference(op, inputs[name]) for name, op in prog.ops}

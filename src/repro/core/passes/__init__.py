@@ -2,5 +2,9 @@ from .vectorize import vectorize
 from .bufferize import bufferize
 from .queue_align import queue_align
 from .model_specific import apply_store_streams
+from .fuse import (FusedGroup, fuse_program, fuse_inputs, split_outputs,
+                   fusion_key)
 
-__all__ = ["vectorize", "bufferize", "queue_align", "apply_store_streams"]
+__all__ = ["vectorize", "bufferize", "queue_align", "apply_store_streams",
+           "FusedGroup", "fuse_program", "fuse_inputs", "split_outputs",
+           "fusion_key"]

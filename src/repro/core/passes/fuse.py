@@ -1,0 +1,186 @@
+"""Multi-table fusion pass (program stage).
+
+A model step's lookups over *distinct* tables (the multi-table DLRM shape
+from the paper's Table 1; RecNMP/MicroRec show co-scheduling lookups across
+tables is where the large wins are) compile today into N independent DAE
+schedules — N access streams, N dispatches, N compile artifacts.  This pass
+merges compatible SLS/SpMM/gather ops into ONE batched loop nest over the
+row-stacked table:
+
+* one access stream walks the concatenated segments (``ptrs`` offset-merged,
+  ``idxs`` unchanged);
+* a per-segment **table-offset stream** ``roff`` rebases indices onto the
+  stacked table on the access unit (MemStr + AluStr — never marshaled);
+* the execute unit sees one interleaved queue, so every downstream
+  optimization (vectorize/bufferize/align/store-streams) applies once to
+  the whole group.
+
+Ops naming a shared table (``EmbeddingProgram.shared_tables``) stack that
+table once and point their ``roff`` entries at the same base.
+
+Compatibility: same kind ∈ {sls, spmm, gather}, emb_len, dtype, semiring,
+weighted flag, block_rows, and the ``offsets`` index format.  Incompatible
+ops compile as singleton units, unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..ops import EmbeddingOp, EmbeddingProgram
+
+FUSABLE_KINDS = ("sls", "spmm", "gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGroup:
+    """A set of member ops compiled as one batched multi-table op."""
+
+    members: tuple           # op names, program order
+    member_ops: tuple        # the original EmbeddingOps
+    op: EmbeddingOp          # the fused op (num_tables = #stacked tables)
+    seg_offsets: tuple       # per-member first output row in the fused out
+    row_offsets: tuple       # per-member base row in the stacked table
+                             # (block units for 'gather')
+
+    @property
+    def num_tables(self) -> int:
+        return self.op.num_tables
+
+
+def fusion_key(prog: EmbeddingProgram, name: str):
+    """Ops with equal keys may fuse; None means never fused."""
+    op = prog.op(name)
+    if (op.kind not in FUSABLE_KINDS or op.index_format != "offsets"
+            or op.num_tables != 1):
+        return None
+    return (op.kind, op.emb_len, op.dtype, op.weighted, op.semiring,
+            op.block_rows)
+
+
+def fuse_program(prog: EmbeddingProgram):
+    """Group compatible ops.  Returns ``(units, note)`` where each unit is
+    either ``(name, op)`` for a singleton or a :class:`FusedGroup`."""
+    groups: dict = {}
+    order: list = []
+    for name, _ in prog.ops:
+        key = fusion_key(prog, name)
+        groups.setdefault(key, []).append(name)
+        order.append((key, name))
+
+    units: list = []
+    emitted: set = set()
+    for key, name in order:
+        if name in emitted:
+            continue
+        members = groups[key] if key is not None else [name]
+        if key is None or len(members) < 2:
+            units.append((name, prog.op(name)))
+            emitted.add(name)
+            continue
+        units.append(_build_group(prog, tuple(members)))
+        emitted.update(members)
+    n_fused = sum(1 for u in units if isinstance(u, FusedGroup))
+    note = (f"{len(prog.ops)} ops -> {len(units)} units "
+            f"({n_fused} fused group{'s' if n_fused != 1 else ''})")
+    return units, note
+
+
+def _build_group(prog: EmbeddingProgram, members: tuple) -> FusedGroup:
+    ops = tuple(prog.op(n) for n in members)
+    proto = ops[0]
+    # stack each distinct table once; shared tables share a base offset
+    slot_base: dict = {}
+    row_offsets: list = []
+    next_row = 0
+    for name, op in zip(members, ops):
+        slot = prog.table_slot(name)
+        if slot not in slot_base:
+            slot_base[slot] = next_row
+            next_row += op.num_embeddings
+        row_offsets.append(slot_base[slot])
+    seg_offsets = tuple(int(x) for x in
+                        np.cumsum([0] + [op.num_segments for op in ops[:-1]]))
+    fused = EmbeddingOp(
+        kind=proto.kind,
+        num_segments=sum(op.num_segments for op in ops),
+        num_embeddings=next_row,
+        emb_len=proto.emb_len,
+        avg_lookups=max(op.avg_lookups for op in ops),
+        block_rows=proto.block_rows,
+        weighted=proto.weighted,
+        semiring=proto.semiring,
+        dtype=proto.dtype,
+        index_format="offsets",
+        # even an all-shared-table group keeps the roff nest (all-zero
+        # offsets): num_tables > 1 is what selects the fused loop shape
+        num_tables=max(len(slot_base), 2),
+    )
+    return FusedGroup(tuple(members), ops, fused, seg_offsets,
+                      tuple(row_offsets))
+
+
+# ---------------------------------------------------------------------------
+# Runtime marshaling: per-op inputs <-> fused inputs/outputs
+# ---------------------------------------------------------------------------
+
+def fuse_inputs(group: FusedGroup, inputs: dict) -> dict:
+    """Build the fused op's concrete inputs from per-op input dicts.
+
+    Placement follows the *compile-time* layout (``group.row_offsets``, which
+    honors the program's shared-table annotation): each declared table slot
+    is written once into the stacked buffer, so the runtime marshaling can
+    never diverge from the compiled fused op — regardless of whether shared
+    tables arrive as one array object or equal-valued copies.  Also
+    offset-merges ``ptrs``, concatenates ``idxs``/``vals``, and emits the
+    per-segment ``roff`` table-offset array.
+    """
+    op0 = group.member_ops[0]
+    blk = op0.block_rows if op0.kind == "gather" else 1
+    total_rows = group.op.num_embeddings * blk
+    table = np.empty((total_rows, op0.emb_len), np.dtype(op0.dtype))
+    placed: set = set()
+    roff_parts: list = []
+    for name, op, base in zip(group.members, group.member_ops,
+                              group.row_offsets):
+        tbl = np.asarray(inputs[name]["table"])
+        row_base = base * blk
+        expect = op.num_embeddings * blk
+        assert tbl.shape[0] == expect, \
+            f"{name}: table has {tbl.shape[0]} rows, op declares {expect}"
+        if base not in placed:      # shared slots are stacked once
+            placed.add(base)
+            table[row_base:row_base + tbl.shape[0]] = tbl
+        roff_parts.append(np.full(op.num_segments, base, np.int32))
+
+    fused_in: dict = {"table": table, "roff": np.concatenate(roff_parts)}
+    op0 = group.member_ops[0]
+    if op0.kind == "gather":
+        fused_in["idxs"] = np.concatenate(
+            [np.asarray(inputs[n]["idxs"]) for n in group.members])
+        return fused_in
+
+    ptrs_parts: list = []
+    nnz = 0
+    for name in group.members:
+        p = np.asarray(inputs[name]["ptrs"], np.int64)
+        ptrs_parts.append(p[:-1] + nnz if ptrs_parts else p[:-1])
+        nnz += int(p[-1])
+    fused_in["ptrs"] = np.concatenate(
+        ptrs_parts + [np.asarray([nnz])]).astype(np.int32)
+    fused_in["idxs"] = np.concatenate(
+        [np.asarray(inputs[n]["idxs"]) for n in group.members])
+    if op0.weighted or op0.kind == "spmm":
+        fused_in["vals"] = np.concatenate(
+            [np.asarray(inputs[n]["vals"]) for n in group.members])
+    return fused_in
+
+
+def split_outputs(group: FusedGroup, fused_out) -> dict:
+    """Slice the fused output back into per-op outputs, keyed by name."""
+    out: dict = {}
+    for name, op, off in zip(group.members, group.member_ops,
+                             group.seg_offsets):
+        out[name] = fused_out[off:off + op.num_segments]
+    return out

@@ -1,31 +1,56 @@
 """emberc — the end-to-end Ember compiler driver (paper §5, Fig 11).
 
-    EmbeddingOp ──build_scf──▶ SCF ──decouple──▶ SLC
-        ──[vectorize]──▶ SLCV ──[bufferize]──▶ ──[store-streams]──▶
-        ──[queue-align]──▶ optimized SLC ──lower──▶ DLC
+Program-level flow (one invocation compiles ALL of a model step's lookups):
+
+    EmbeddingProgram {name_i: EmbeddingOp_i}
+        ──[fuse]──▶ units = fused multi-table ops + singletons   (program)
+    then per unit, under the PassManager (stage, ✓ = verifier between passes):
+        EmbeddingOp ──build-scf──▶ SCF ✓ ──decouple──▶ SLC ✓
+            ──[vectorize]──▶ SLCV ✓ ──[bufferize]──▶ ✓
+            ──[store-streams]──▶ ✓ ──[queue-align]──▶ ✓
+            ──lower-dlc──▶ DLC ✓
         ──codegen──▶ {queue-faithful interpreter | jnp baseline | Pallas plan}
 
-Opt levels mirror the paper's ablation (Table 4):
+    compile cache: (program.signature(), opt_level, vlen) ──▶ ProgramCompileResult
+        (a hit returns the cached artifact; NO pass re-runs — observable via
+         PassManager.total_executed and the per-pass PassRecord diagnostics)
+
+Opt levels mirror the paper's ablation (Table 4) and are ordered
+numerically (``O<n>``; OPT_LEVELS is the source of truth):
 
     O0  emb-opt0   unoptimized decoupled code
     O1  emb-opt1   + vectorization           (§7.1)
     O2  emb-opt2   + bufferization           (§7.2)
     O3  emb-opt3   + queue alignment and model-specific store
                      streams where applicable (§7.3, §7.4)
+
+Single-op entry points (``compile_op``/``run_interpreted``) remain as thin
+wrappers over a one-op program.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Optional, Union
 
-from .ops import EmbeddingOp
-from .scf import ScfFunc, build_scf
-from .decouple import decouple
-from .dlc import DlcProgram, lower_to_dlc
-from .passes import apply_store_streams, bufferize, queue_align, vectorize
+from .dlc import DlcProgram
+from .ops import EmbeddingOp, EmbeddingProgram, single_op_program
+from .pass_manager import PassManager, PassRecord
+from .passes import FusedGroup, fuse_inputs, fuse_program, split_outputs
+from .scf import ScfFunc
 from .slc import SlcFunc
 
 OPT_LEVELS = ("O0", "O1", "O2", "O3")
+
+
+def opt_level_index(opt_level: Union[str, int]) -> int:
+    """Parse ``"O<n>"`` to its numeric level (the only sanctioned way to
+    compare opt levels — lexical comparison breaks past O9)."""
+    if isinstance(opt_level, int):
+        assert 0 <= opt_level < len(OPT_LEVELS), opt_level
+        return opt_level
+    assert opt_level in OPT_LEVELS, opt_level
+    return OPT_LEVELS.index(opt_level)
 
 
 @dataclasses.dataclass
@@ -35,28 +60,147 @@ class CompileResult:
     scf: ScfFunc
     slc: SlcFunc
     dlc: DlcProgram
+    records: list = dataclasses.field(default_factory=list)  # PassRecords
 
     @property
     def opt(self) -> dict:
         return self.slc.opt
 
+    @property
+    def opt_level_idx(self) -> int:
+        return opt_level_index(self.opt_level)
 
-def compile_op(op: EmbeddingOp, opt_level: str = "O3",
-               vlen: int = 128) -> CompileResult:
-    """Compile an embedding operation through the full IR stack."""
+
+@dataclasses.dataclass
+class CompiledUnit:
+    """One compiled unit of a program: a singleton op or a fused group."""
+
+    names: tuple                     # member op names (len 1 if unfused)
+    result: CompileResult
+    group: Optional[FusedGroup] = None
+
+    @property
+    def fused(self) -> bool:
+        return self.group is not None
+
+
+@dataclasses.dataclass
+class ProgramCompileResult:
+    program: EmbeddingProgram
+    opt_level: str
+    vlen: int
+    units: list                      # of CompiledUnit
+    records: list                    # program-level PassRecords
+    cache_hit: bool = False
+
+    @property
+    def fused_units(self) -> list:
+        return [u for u in self.units if u.fused]
+
+    def unit_of(self, name: str) -> CompiledUnit:
+        for u in self.units:
+            if name in u.names:
+                return u
+        raise KeyError(name)
+
+    def pass_records(self) -> list:
+        """All diagnostics: program-level + every unit's pass records."""
+        out = list(self.records)
+        for u in self.units:
+            out.extend(u.result.records)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+_DEFAULT_PM = PassManager()
+
+# compile cache: (program signature, opt_level, vlen) -> ProgramCompileResult
+_COMPILE_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_cache_stats() -> dict:
+    s = dict(_CACHE_STATS)
+    s["entries"] = len(_COMPILE_CACHE)
+    total = s["hits"] + s["misses"]
+    s["hit_rate"] = s["hits"] / total if total else 0.0
+    return s
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def _compile_one(op: EmbeddingOp, opt_level: str, vlen: int,
+                 pm: PassManager) -> CompileResult:
+    arts, records = pm.run(op, opt_level_index(opt_level), vlen=vlen)
+    return CompileResult(op, opt_level, arts["scf"], arts["slc"],
+                         arts["dlc"], records)
+
+
+def compile_program(program: EmbeddingProgram, opt_level: str = "O3",
+                    vlen: int = 128, pm: Optional[PassManager] = None,
+                    fuse: bool = True,
+                    use_cache: bool = True) -> ProgramCompileResult:
+    """Compile every lookup of a model step as one unit.
+
+    The fusion pass first merges compatible multi-table lookups; each
+    resulting unit then runs the full PassManager pipeline.  Results are
+    memoized on ``(program.signature(), opt_level, vlen)`` so steady-state
+    callers (decode servers, train steps) pay compilation once.
+    """
     assert opt_level in OPT_LEVELS, opt_level
-    scf_fn = build_scf(op)
-    slc_fn = decouple(scf_fn)
-    if opt_level >= "O1":
-        slc_fn = vectorize(slc_fn, vlen=vlen)
-    if opt_level >= "O2":
-        slc_fn = bufferize(slc_fn)
-    if opt_level >= "O3":
-        slc_fn = apply_store_streams(slc_fn)
-        slc_fn = queue_align(slc_fn)
-    dlc_prog = lower_to_dlc(slc_fn)
-    return CompileResult(op, opt_level, scf_fn, slc_fn, dlc_prog)
+    key = (program.signature(), opt_level, vlen, fuse)
+    if use_cache and pm is None:
+        cached = _COMPILE_CACHE.get(key)
+        if cached is not None:
+            _CACHE_STATS["hits"] += 1
+            return dataclasses.replace(cached, cache_hit=True)
+        _CACHE_STATS["misses"] += 1
 
+    pm_ = pm or _DEFAULT_PM
+    records: list = []
+    if fuse:
+        t0 = time.perf_counter()
+        units_spec, note = fuse_program(program)
+        records.append(PassRecord("fuse", "program", ran=True,
+                                  duration_s=time.perf_counter() - t0,
+                                  note=note))
+    else:
+        units_spec = [(n, op) for n, op in program.ops]
+        records.append(PassRecord("fuse", "program", ran=False,
+                                  note="disabled"))
+
+    units: list = []
+    for spec in units_spec:
+        if isinstance(spec, FusedGroup):
+            res = _compile_one(spec.op, opt_level, vlen, pm_)
+            units.append(CompiledUnit(spec.members, res, group=spec))
+        else:
+            name, op = spec
+            res = _compile_one(op, opt_level, vlen, pm_)
+            units.append(CompiledUnit((name,), res))
+
+    out = ProgramCompileResult(program, opt_level, vlen, units, records)
+    if use_cache and pm is None:
+        _COMPILE_CACHE[key] = out
+    return out
+
+
+def compile_op(op: EmbeddingOp, opt_level: str = "O3", vlen: int = 128,
+               pm: Optional[PassManager] = None) -> CompileResult:
+    """Compile a single embedding operation through the full IR stack."""
+    assert opt_level in OPT_LEVELS, opt_level
+    return _compile_one(op, opt_level, vlen, pm or _DEFAULT_PM)
+
+
+# ---------------------------------------------------------------------------
+# Reference execution
+# ---------------------------------------------------------------------------
 
 def run_interpreted(res: CompileResult, inputs: dict, stage: str = "dlc",
                     return_queues: bool = False):
@@ -70,3 +214,38 @@ def run_interpreted(res: CompileResult, inputs: dict, stage: str = "dlc",
     if stage == "dlc":
         return interp.interp_dlc(res.dlc, inputs, return_queues=return_queues)
     raise ValueError(stage)
+
+
+def run_program_interpreted(pres: ProgramCompileResult, inputs: dict,
+                            stage: str = "dlc",
+                            return_queues: bool = False):
+    """Execute a compiled program; returns per-op outputs keyed by name.
+
+    ``inputs`` maps op name -> that op's concrete inputs (see
+    :func:`repro.core.ops.make_program_inputs`).  Fused units marshal their
+    members' inputs into the stacked form, run once, and split the result.
+    With ``return_queues`` also returns aggregated queue statistics (only
+    meaningful for the queue-faithful DLC stage).
+    """
+    assert not return_queues or stage == "dlc", \
+        "queue statistics only exist at the dlc stage"
+    outs: dict = {}
+    stats = {"data_pushed": 0, "tokens": 0, "data_left": 0, "ctrl_left": 0}
+
+    def _run(res, ins):
+        if return_queues and stage == "dlc":
+            out, st = run_interpreted(res, ins, stage, return_queues=True)
+            for k in stats:
+                stats[k] += st[k]
+            return out
+        return run_interpreted(res, ins, stage)
+
+    for unit in pres.units:
+        if unit.group is None:
+            outs[unit.names[0]] = _run(unit.result, inputs[unit.names[0]])
+        else:
+            fused_out = _run(unit.result, fuse_inputs(unit.group, inputs))
+            outs.update(split_outputs(unit.group, fused_out))
+    if return_queues:
+        return outs, stats
+    return outs

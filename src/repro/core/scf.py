@@ -126,15 +126,21 @@ def build_scf(op: EmbeddingOp) -> ScfFunc:
     def decl(name, rank, ro=True, dtype=None):
         return MemRefDecl(name, rank, dtype or op.dtype, ro)
 
+    fused = op.num_tables > 1
     if op.kind == "gather":
         memrefs = {
             "idxs": decl("idxs", 1, dtype="int32"),
             "table": decl("table", 2),
             "out": decl("out", 3, ro=False),
         }
+        if fused:
+            memrefs["roff"] = decl("roff", 1, dtype="int32")
+        head = [Let("i0", Load("idxs", (VarRef("g"),))),
+                Let("base", Load("roff", (VarRef("g"),))),
+                Let("i", Bin("+", VarRef("i0"), VarRef("base")))] if fused \
+            else [Let("i", Load("idxs", (VarRef("g"),)))]
         body = [
-            For("g", Const(0), P("num_segments"), [
-                Let("i", Load("idxs", (VarRef("g"),))),
+            For("g", Const(0), P("num_segments"), head + [
                 For("r", Const(0), P("block_rows"), [
                     Let("row", Bin("+", Bin("*", VarRef("i"), P("block_rows")),
                                    VarRef("r"))),
@@ -210,6 +216,8 @@ def build_scf(op: EmbeddingOp) -> ScfFunc:
 
     # sls / spmm share one nest (paper §4: SLS ≡ SpMM(ikj, CSR))
     lengths = op.index_format == "lengths"
+    assert not (fused and lengths), \
+        "multi-table fusion requires the offsets index format"
     memrefs = {
         ("lens" if lengths else "ptrs"):
             decl("lens" if lengths else "ptrs", 1, dtype="int32"),
@@ -217,15 +225,21 @@ def build_scf(op: EmbeddingOp) -> ScfFunc:
         "table": decl("table", 2),
         "out": decl("out", 2, ro=False),
     }
+    if fused:
+        memrefs["roff"] = decl("roff", 1, dtype="int32")
     weighted = op.weighted or op.kind == "spmm"
     if weighted:
         memrefs["vals"] = decl("vals", 1)
     inner_val: Expr = Load("table", (VarRef("i"), VarRef("e")))
     if weighted:
         inner_val = Bin(_mul_binop(sr), VarRef("w"), inner_val)
-    seg_body: list = [
-        Let("i", Load("idxs", (VarRef("p"),))),
-    ]
+    if fused:
+        # the table-offset stream: idxs rebase onto the stacked table is
+        # access-unit index arithmetic (MemStr roff[b] + AluStr add)
+        seg_body = [Let("i0", Load("idxs", (VarRef("p"),))),
+                    Let("i", Bin("+", VarRef("i0"), VarRef("base")))]
+    else:
+        seg_body = [Let("i", Load("idxs", (VarRef("p"),)))]
     if weighted:
         seg_body.append(Let("w", Load("vals", (VarRef("p"),))))
     seg_body.append(
@@ -247,12 +261,15 @@ def build_scf(op: EmbeddingOp) -> ScfFunc:
             ]),
         ]
     else:
+        seg_head = [
+            Let("beg", Load("ptrs", (VarRef("b"),))),
+            Let("end", Load("ptrs", (Bin("+", VarRef("b"), Const(1)),))),
+        ]
+        if fused:
+            seg_head.append(Let("base", Load("roff", (VarRef("b"),))))
         body = [
-            For("b", Const(0), Param("num_segments"), [
-                Let("beg", Load("ptrs", (VarRef("b"),))),
-                Let("end", Load("ptrs", (Bin("+", VarRef("b"), Const(1)),))),
-                For("p", VarRef("beg"), VarRef("end"), seg_body),
-            ]),
+            For("b", Const(0), Param("num_segments"),
+                seg_head + [For("p", VarRef("beg"), VarRef("end"), seg_body)]),
         ]
     params = {"num_segments": op.num_segments, "emb_len": op.emb_len}
     return ScfFunc(op.kind, memrefs, params, body, op)

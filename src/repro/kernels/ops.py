@@ -20,10 +20,12 @@ def default_interpret() -> bool:
 
 
 def sls(table, ptrs, idxs, weights=None, *, num_segments, max_lookups,
-        add_op="add", mul_op="mul", col_tile=128, interpret=None):
+        add_op="add", mul_op="mul", col_tile=128, interpret=None,
+        seg_base=None):
     return sls_pallas(table, ptrs, idxs, weights,
                       num_segments=num_segments, max_lookups=max_lookups,
                       add_op=add_op, mul_op=mul_op, col_tile=col_tile,
+                      seg_base=seg_base,
                       interpret=default_interpret() if interpret is None
                       else interpret)
 

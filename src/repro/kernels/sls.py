@@ -31,8 +31,8 @@ _INIT = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}
 _COMBINE = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
 
 
-def _sls_kernel(ptrs, idxs, table_row, weights, out, *, add_op, mul_op,
-                weighted):
+def _sls_kernel(ptrs, idxs, seg_base, table_row, weights, out, *, add_op,
+                mul_op, weighted):
     """One grid step = one (segment b, column tile c, lookup slot j)."""
     b = pl.program_id(0)
     j = pl.program_id(2)   # innermost: the out block (b, c) is revisited
@@ -66,13 +66,16 @@ def _sls_kernel(ptrs, idxs, table_row, weights, out, *, add_op, mul_op,
                      "col_tile", "interpret"))
 def sls_pallas(table, ptrs, idxs, weights=None, *, num_segments: int,
                max_lookups: int, add_op: str = "add", mul_op: str = "mul",
-               col_tile: int = 128, interpret: bool = False):
+               col_tile: int = 128, interpret: bool = False, seg_base=None):
     """Compiler entry point (see `repro.core.backend_pallas.KernelPlan`).
 
     table     (N, E)   embedding table (HBM resident)
     ptrs      (B+1,)   CSR segment offsets  — scalar-prefetched
     idxs      (nnz,)   row indices          — scalar-prefetched
     weights   (nnz,)   optional per-lookup scale (GNN edge values)
+    seg_base  (B,)     optional per-segment table-row base — the fused
+                       multi-table program's table-offset stream, applied in
+                       the scalar-prefetched index map (access-unit ALU)
     """
     n_rows, emb_len = table.shape
     # queue alignment (§7.3): pad the row to a lane-aligned tile so every
@@ -89,17 +92,22 @@ def sls_pallas(table, ptrs, idxs, weights=None, *, num_segments: int,
     weights2d = weights[None, :]  # SMEM scalars must be ≥1-d arrays
     if idxs.shape[0] == 0:        # degenerate all-empty batch
         idxs = jnp.zeros((1,), jnp.int32)
+    if seg_base is None:          # single-table: zero base, broadcast-safe
+        seg_base = jnp.zeros((1,), jnp.int32)
 
     grid = (num_segments, col_blocks, max_lookups)
 
-    def table_map(b, c, j, ptrs_ref, idxs_ref):
+    def table_map(b, c, j, ptrs_ref, idxs_ref, base_ref):
         beg = ptrs_ref[b]
         n = ptrs_ref[b + 1] - beg
         # masked tail: clamp to a safe row; @pl.when skips the accumulate
         p = beg + jnp.minimum(j, jnp.maximum(n - 1, 0))
-        return idxs_ref[jnp.minimum(p, idxs_ref.shape[0] - 1)], c
+        row = idxs_ref[jnp.minimum(p, idxs_ref.shape[0] - 1)]
+        # fused multi-table rebase onto the stacked table (§ program fusion)
+        row = row + base_ref[jnp.minimum(b, base_ref.shape[0] - 1)]
+        return row, c
 
-    def out_map(b, c, j, ptrs_ref, idxs_ref):
+    def out_map(b, c, j, ptrs_ref, idxs_ref, base_ref):
         return b, c
 
     kernel = functools.partial(_sls_kernel, add_op=add_op, mul_op=mul_op,
@@ -108,7 +116,7 @@ def sls_pallas(table, ptrs, idxs, weights=None, *, num_segments: int,
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, col_tile), table_map),   # one row tile/DMA
@@ -118,7 +126,7 @@ def sls_pallas(table, ptrs, idxs, weights=None, *, num_segments: int,
         ),
         out_shape=jax.ShapeDtypeStruct((num_segments, padded), table.dtype),
         interpret=interpret,
-    )(ptrs, idxs, table, weights2d)
+    )(ptrs, idxs, jnp.asarray(seg_base, jnp.int32), table, weights2d)
     return out[:, :emb_len]
 
 

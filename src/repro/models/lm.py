@@ -237,6 +237,28 @@ class LM:
         self.cfg = cfg
         self.shard = shard or ShardCtx()
 
+    # ---- Ember program compilation ----
+    def embedding_program(self, batch: int, seq: int):
+        """All irregular lookups of one (batch, seq) step as one
+        :class:`~repro.core.ops.EmbeddingProgram` — what the runtimes
+        compile (cached) and reuse across steps."""
+        cfg = self.cfg
+        tokens = batch * seq
+        extra = []
+        pattern = tuple(cfg.block_pattern) + tuple(cfg.remainder_pattern)
+        if cfg.num_experts and any(k in ("moe", "mla") for k in pattern):
+            extra.append(("moe_dispatch",
+                          moe_mod.dispatch_op(cfg, tokens)))
+        return ee.model_embedding_program(
+            vocab_size=cfg.padded_vocab, d_model=cfg.d_model, tokens=tokens,
+            extra_ops=tuple(extra), name=f"{cfg.name}-step")
+
+    def compile_embeddings(self, batch: int, seq: int,
+                           opt_level: str = "O3"):
+        """Compile this model's embedding program (compile-cache backed)."""
+        from ..core.pipeline import compile_program
+        return compile_program(self.embedding_program(batch, seq), opt_level)
+
     # ---- init ----
     def init(self, key) -> dict:
         cfg = self.cfg

@@ -20,7 +20,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.ops import EmbeddingOp
 from .common import ModelConfig, dense_init, _ACTS
+
+
+def dispatch_op(cfg: ModelConfig, tokens: int) -> EmbeddingOp:
+    """The EP dispatch as a characterized embedding operation.
+
+    Un-dispatch (``out_buf[slot]`` below) is a plain irregular gather over
+    the (E·C, D) capacity buffer — the op the Ember program compiler
+    co-schedules with the step's other lookups (paper Table 1 taxonomy).
+    """
+    e, k = cfg.num_experts, max(cfg.experts_per_tok, 1)
+    capacity = int(tokens * k / e * cfg.capacity_factor) + 1
+    return EmbeddingOp("gather", num_segments=tokens * k,
+                       num_embeddings=e * capacity, emb_len=cfg.d_model)
 
 
 def init_moe(key, cfg: ModelConfig, dtype):

@@ -39,6 +39,16 @@ class DecodeServer:
                                              for _ in range(batch_slots)]
         self.caches = lm.init_caches(batch_slots, max_len)
         self._step = jax.jit(lm.decode_step)
+        # Ember program compile: the decode step's irregular lookups compile
+        # ONCE per (slots, 1) signature; every later wave is a cache hit.
+        self.emb_compiled = None
+        self.compile_stats: Optional[dict] = None
+        if hasattr(lm, "embedding_program"):
+            from ..core import pipeline as emberc
+            self._emberc = emberc
+            self.emb_compiled = emberc.compile_program(
+                lm.embedding_program(batch_slots, 1))
+            self.compile_stats = emberc.compile_cache_stats()
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -51,6 +61,11 @@ class DecodeServer:
         if any(self.active) or not self.queue:
             return
         self.caches = self.lm.init_caches(self.slots, self.max_len)
+        if self.emb_compiled is not None:
+            # per-wave recompile is free: identical program signature → hit
+            self.emb_compiled = self._emberc.compile_program(
+                self.lm.embedding_program(self.slots, 1))
+            self.compile_stats = self._emberc.compile_cache_stats()
         for i in range(self.slots):
             if self.queue:
                 req = self.queue.popleft()

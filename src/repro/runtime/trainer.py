@@ -66,9 +66,18 @@ class Trainer:
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self._step_fn = None
         self.in_shardings = in_shardings
+        self.emb_compiled = None
 
     def _build_step(self):
         lm, opt, tcfg = self.lm, self.opt, self.tcfg
+        # Ember program compile: the train step's irregular lookups (token
+        # embed + label gather + MoE dispatch) compile once per (batch, seq)
+        # signature; restarts and later steps hit the compile cache.
+        if self.emb_compiled is None and hasattr(lm, "embedding_program"):
+            from ..core import pipeline as emberc
+            dc = self.data.cfg
+            self.emb_compiled = emberc.compile_program(
+                lm.embedding_program(dc.global_batch, dc.seq_len))
 
         def train_step(params, opt_state, ef, batch):
             loss, grads = jax.value_and_grad(lm.loss)(params, batch)
@@ -129,8 +138,12 @@ class Trainer:
                     step + 1 == tcfg.total_steps:
                 self.ckpt.save(step, state)
         self.ckpt.wait()
-        return {"final_step": tcfg.total_steps - 1, "losses": losses,
-                "state": state}
+        out = {"final_step": tcfg.total_steps - 1, "losses": losses,
+               "state": state}
+        if self.emb_compiled is not None:
+            from ..core.pipeline import compile_cache_stats
+            out["embedding_compile"] = compile_cache_stats()
+        return out
 
 
 def run_supervised(make_trainer: Callable[[], Trainer], key, *,

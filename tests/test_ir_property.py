@@ -6,7 +6,12 @@ stage and opt level, queues always conserve, and alignment padding is
 value-preserving.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.ops import EmbeddingOp, Semiring, make_inputs, reference
 from repro.core.pipeline import compile_op, run_interpreted
