@@ -9,7 +9,7 @@ from __future__ import annotations
 import sys
 
 BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
-           "vs_handopt", "lm_step"]
+           "vs_handopt", "lm_step", "steady_state"]
 
 
 def main() -> None:

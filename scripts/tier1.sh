@@ -3,14 +3,23 @@
 #
 #   scripts/tier1.sh            # exactly the ROADMAP tier-1 run
 #   scripts/tier1.sh --fast     # + no cacheprovider (clean CI workspaces)
+#                               # + steady-state executor bench smoke run
 #   scripts/tier1.sh [pytest args...]   # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAST=0
 EXTRA=()
 if [[ "${1:-}" == "--fast" ]]; then
+  FAST=1
   EXTRA+=(-p no:cacheprovider)
   shift
 fi
-exec python -m pytest -x -q "${EXTRA[@]}" "$@"
+python -m pytest -x -q "${EXTRA[@]}" "$@"
+
+if [[ "$FAST" == 1 ]]; then
+  # steady-state throughput smoke: asserts the partitioner's VMEM audit and
+  # refreshes BENCH_steady_state.json (small sizes; seconds, not minutes)
+  python benchmarks/bench_steady_state.py --fast
+fi

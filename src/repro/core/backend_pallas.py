@@ -23,11 +23,13 @@ the cost model, and the Pallas backend refuses plans narrower than a lane.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from .cost_model import lane_tile
 from .ops import EmbeddingOp
 from .pipeline import (CompileResult, ProgramCompileResult, opt_level_index)
 from .passes import fuse_inputs, split_outputs
@@ -58,8 +60,7 @@ def make_plan(res: CompileResult) -> KernelPlan:
     vlen = opt.get("vlen") or 0
     if vlen and vlen < 128:
         vlen = 128  # TPU lane width floor (see module docstring)
-    emb = res.op.emb_len
-    col_tile = min(_round_up(max(vlen, 128), 128), _round_up(emb, 128))
+    col_tile = lane_tile(res.op.emb_len, vlen)
     return KernelPlan(
         kind=res.op.kind,
         col_tile=col_tile,
@@ -70,8 +71,16 @@ def make_plan(res: CompileResult) -> KernelPlan:
     )
 
 
-def execute(res: CompileResult, inputs: dict, interpret: bool = True):
-    """Run the compiled op through the Pallas DAE kernels."""
+def execute(res: CompileResult, inputs: dict, interpret: bool = True,
+            max_lookups: Optional[int] = None):
+    """Run the compiled op through the Pallas DAE kernels.
+
+    ``max_lookups`` (the kernel's static lookup-slot grid extent) is derived
+    from ``ptrs`` when absent — a host read of the offsets.  Steady-state
+    callers (:mod:`repro.core.executor`) pass a precomputed *bucketed* value
+    so device-resident ``ptrs`` are never synced back to the host and ragged
+    batches reuse one jit specialization per bucket.
+    """
     op = res.op
     plan = make_plan(res)
     if op.kind == "gather":
@@ -85,17 +94,22 @@ def execute(res: CompileResult, inputs: dict, interpret: bool = True):
                                  interpret=interpret)
     if op.kind == "fusedmm":
         ptrs = _ptrs_of(op, inputs)
+        if max_lookups is None:
+            max_lookups = kops.max_lookups_of(np.asarray(ptrs))
         return kops.fusedmm(jnp.asarray(inputs["x"]), jnp.asarray(ptrs),
                             jnp.asarray(inputs["idxs"]),
                             num_segments=op.num_segments,
-                            max_lookups=kops.max_lookups_of(ptrs),
+                            max_lookups=max_lookups,
                             interpret=interpret)
     if op.kind == "kg":
         ptrs = np.arange(op.num_segments + 1, dtype=np.int32)
         w = inputs["vals"]
+        max_lookups = 1
     else:
         ptrs = _ptrs_of(op, inputs)
         w = inputs.get("vals")
+    if max_lookups is None:
+        max_lookups = kops.max_lookups_of(np.asarray(ptrs))
     col_tile = plan.col_tile if plan.whole_row_dma else 128
     seg_base = None
     if plan.batched and "roff" in inputs:
@@ -104,7 +118,7 @@ def execute(res: CompileResult, inputs: dict, interpret: bool = True):
                     jnp.asarray(inputs["idxs"]),
                     None if w is None else jnp.asarray(w),
                     num_segments=op.num_segments,
-                    max_lookups=kops.max_lookups_of(ptrs),
+                    max_lookups=max_lookups,
                     add_op=op.semiring.add, mul_op=op.semiring.mul,
                     col_tile=col_tile, interpret=interpret,
                     seg_base=seg_base)
@@ -132,14 +146,12 @@ def execute_program(pres: ProgramCompileResult, inputs: dict,
     return outs
 
 
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _ptrs_of(op: EmbeddingOp, inputs: dict) -> np.ndarray:
-    """CSR offsets from either index format (lengths → cumulative sum)."""
+def _ptrs_of(op: EmbeddingOp, inputs: dict):
+    """CSR offsets from either index format (lengths → cumulative sum).
+    Already-device arrays pass through untouched (no host round trip)."""
     if op.index_format == "lengths" and "ptrs" not in inputs:
         ptrs = np.zeros(op.num_segments + 1, np.int32)
         np.cumsum(inputs["lens"], out=ptrs[1:])
         return ptrs
-    return np.asarray(inputs["ptrs"])
+    ptrs = inputs["ptrs"]
+    return ptrs if isinstance(ptrs, jnp.ndarray) else np.asarray(ptrs)

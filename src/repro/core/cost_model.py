@@ -160,6 +160,133 @@ def requests_per_second(m: Machine = DEFAULT, decoupled: bool = True,
     return outstanding / lam * m.freq_ghz * 1e9
 
 
+# ---------------------------------------------------------------------------
+# Batched-plan resource model (fusion partitioning, PR 2)
+#
+# A fused multi-table unit compiles to ONE batched KernelPlan whose on-chip
+# working set grows with the group: the double-buffered row tiles and the
+# output tile are fixed, but the scalar-prefetched access-stream operands
+# (ptrs, idxs, roff, vals) are resident for the whole launch.  The fusion
+# partitioner uses these estimates to fuse only groups that fit the budget
+# and to split giant groups into sub-units balanced on *access* cycles (the
+# serial resource of the DAE machine — the execute unit drains whatever the
+# access stream feeds it, so skewed sub-units idle the narrow side).
+# ---------------------------------------------------------------------------
+
+#: Default on-chip budget for one batched plan's working set (row-tile
+#: double buffers + output tile + scalar-prefetch operand arrays).  TPU
+#: cores have ~16 MiB of VMEM; one fused unit may claim at most a quarter so
+#: the rest of the step (attention, MLP tiles) still fits.
+VMEM_BUDGET_BYTES = 4 * 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionBudget:
+    """Resource envelope the fusion partitioner must respect."""
+
+    vmem_bytes: int = VMEM_BUDGET_BYTES
+    num_buffers: int = 2          # DMA pipeline depth (KernelPlan default)
+    #: target ceiling on access/execute cycle skew of one fused plan; groups
+    #: above it are still legal (skew is reported, not enforced) — balance
+    #: is what the partitioner optimizes when it has to split anyway.
+    balance_target: float = 8.0
+
+
+def lane_tile(emb_len: int, vlen: int) -> int:
+    """THE column-tile choice of a KernelPlan (backend_pallas.make_plan
+    calls this too — one definition, so the partitioner's VMEM audit can
+    never drift from what the backend actually tiles)."""
+    def up(x, m):
+        return -(-x // m) * m
+    return min(up(max(vlen, 128), 128), up(emb_len, 128))
+
+
+def plan_tile_bytes(op: EmbeddingOp, vlen: int = 128,
+                    num_buffers: int = 2) -> int:
+    """Fixed VMEM of one batched plan: in-flight row tiles + output tile."""
+    itemsize = 4  # f32 tiles (lower precision still DMA-pads to lanes)
+    tile = lane_tile(op.emb_len, vlen)
+    rows = op.block_rows if op.kind == "gather" else 1
+    return (num_buffers + 1) * rows * tile * itemsize
+
+
+def operand_bytes(op: EmbeddingOp, force_vals: bool = False) -> int:
+    """Scalar-prefetch (access stream) footprint of one member op: the CSR
+    ``ptrs``, the expected ``idxs``/``vals`` nnz, and its ``roff`` slot.
+
+    ``force_vals``: a mixed weighted/unweighted group unit-weight-upcasts,
+    so EVERY member marshals a vals word per lookup — the group-level
+    estimators pass ``group_needs_vals`` here so the audit counts what the
+    fused plan actually prefetches.
+    """
+    lookups = expected_lookups(op)
+    words = op.num_segments + 1          # ptrs (kg: the degenerate arange)
+    words += lookups                     # idxs
+    words += op.num_segments             # roff entry per segment
+    if force_vals or op.weighted or op.kind in ("spmm", "kg"):
+        words += lookups                 # vals
+    return words * 4
+
+
+def group_needs_vals(ops) -> bool:
+    """Does a fused group of ``ops`` marshal a vals stream (and hence
+    unit-weight-upcast its unweighted members)?  Mirrors _build_group."""
+    return any(op.weighted or op.kind in ("spmm", "kg") for op in ops)
+
+
+def expected_lookups(op: EmbeddingOp) -> int:
+    """Expected access-stream length (kg is one lookup per segment)."""
+    if op.kind == "kg":
+        return op.num_segments
+    if op.kind == "gather":
+        return op.num_segments
+    return op.num_segments * max(op.avg_lookups, 1)
+
+
+def access_weight(op: EmbeddingOp, lvl: int = 3, m: Machine = DEFAULT) -> float:
+    """Total access-unit cycles this op contributes to a fused plan's
+    (serial) traversal stream — the partitioner's balance weight."""
+    return expected_lookups(op) * access_cycles_per_lookup(op, m, lvl)
+
+
+def execute_weight(op: EmbeddingOp, lvl: int = 3, m: Machine = DEFAULT) -> float:
+    return expected_lookups(op) * compute_cycles_per_lookup(op, m, lvl)
+
+
+def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
+                         num_buffers: int = 2,
+                         m: Machine = DEFAULT) -> dict:
+    """Resource estimate of compiling ``ops`` as ONE batched KernelPlan.
+
+    Returns vmem_bytes (tiles + scalar operands), the split of that total,
+    total access/execute cycles of the batched stream, and their skew
+    (``queue_balance`` ≥ 1; 1.0 = perfectly balanced DAE queues).
+    """
+    ops = list(ops)
+    assert ops, "empty fusion candidate"
+    tiles = max(plan_tile_bytes(op, vlen, num_buffers) for op in ops)
+    upcast = group_needs_vals(ops)
+    operands = sum(operand_bytes(op, force_vals=upcast) for op in ops)
+    acc = sum(access_weight(op, lvl, m) for op in ops)
+    exe = sum(execute_weight(op, lvl, m) for op in ops)
+    hi, lo = max(acc, exe), min(acc, exe)
+    return {
+        "vmem_bytes": tiles + operands,
+        "tile_bytes": tiles,
+        "operand_bytes": operands,
+        "access_cycles": acc,
+        "execute_cycles": exe,
+        "queue_balance": (hi / lo) if lo > 0 else math.inf,
+    }
+
+
+def fits_budget(ops, vlen: int = 128,
+                budget: FusionBudget = FusionBudget()) -> bool:
+    """May ``ops`` legally compile as one fused unit under ``budget``?"""
+    res = fused_plan_resources(ops, vlen, num_buffers=budget.num_buffers)
+    return res["vmem_bytes"] <= budget.vmem_bytes
+
+
 def queue_plane_point(op: EmbeddingOp, lvl: int, hit_rate: float = 0.0,
                       m: Machine = DEFAULT) -> tuple:
     """Fig 17: (access-unit queue-write rate, execute-unit queue-read rate),

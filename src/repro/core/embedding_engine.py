@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .jax_compat import shard_map
 from .ops import EmbeddingOp, EmbeddingProgram, single_op_program
 
 
@@ -136,9 +137,9 @@ def _masked_lookup(table, ids, mesh, vocab_axis, data_axes, seq_scatter):
     ids_spec = P(dp, *(None,) * (ids.ndim - 1))
     out_tail = (vocab_axis, None) if seq_scatter else (None, None)
     out_spec = P(dp, *(None,) * (ids.ndim - 2), *out_tail)
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(P(vocab_axis, None), ids_spec),
-                         out_specs=out_spec, check_vma=False)(table, ids)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(vocab_axis, None), ids_spec),
+                     out_specs=out_spec, check_vma=False)(table, ids)
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +192,7 @@ def xent_vocab_parallel(x: jax.Array, table: jax.Array, labels: jax.Array, *,
     dp = tuple(data_axes) if data_axes else None
     x_spec = P(dp, *(None,) * (x.ndim - 1))
     lbl_spec = P(dp, *(None,) * (labels.ndim - 1))
-    loss = jax.shard_map(
+    loss = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(vocab_axis, None), lbl_spec),
         out_specs=P(),

@@ -1,0 +1,24 @@
+"""Version-compat shims for the narrow jax API surface we depend on.
+
+The repo targets current jax but must run on the 0.4.x line too (this
+container ships 0.4.37): ``jax.shard_map`` graduated from
+``jax.experimental.shard_map`` in 0.5/0.6 and renamed its replication-check
+kwarg (``check_rep`` → ``check_vma``).  Callers use :func:`shard_map` below
+with the *new* spelling; the shim rewrites for old versions.
+
+Mesh-related shims (``axis_types_kw``, ``mesh_context``) live in
+:mod:`repro.launch.mesh` next to the mesh constructors.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

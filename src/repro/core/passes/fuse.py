@@ -4,7 +4,7 @@ A model step's lookups over *distinct* tables (the multi-table DLRM shape
 from the paper's Table 1; RecNMP/MicroRec show co-scheduling lookups across
 tables is where the large wins are) compile today into N independent DAE
 schedules — N access streams, N dispatches, N compile artifacts.  This pass
-merges compatible SLS/SpMM/gather ops into ONE batched loop nest over the
+merges compatible SLS/SpMM/gather/KG ops into ONE batched loop nest over the
 row-stacked table:
 
 * one access stream walks the concatenated segments (``ptrs`` offset-merged,
@@ -18,19 +18,35 @@ row-stacked table:
 Ops naming a shared table (``EmbeddingProgram.shared_tables``) stack that
 table once and point their ``roff`` entries at the same base.
 
-Compatibility: same kind ∈ {sls, spmm, gather}, emb_len, dtype, semiring,
-weighted flag, block_rows, and the ``offsets`` index format.  Incompatible
-ops compile as singleton units, unchanged.
+Compatibility: same CSR class — ``kg`` fuses with ``sls`` as a *degenerate
+CSR* (one lookup per segment, ``ptrs = arange``) — plus equal emb_len,
+dtype, semiring, block_rows and the ``offsets`` index format.  Mixed
+weighted/unweighted members fuse via a **unit-weight upcast**: unweighted
+members marshal a constant ⊗-identity ``vals`` stream (1 for mul, 0 for
+add).  Incompatible ops compile as singleton units, unchanged.
+
+**Cost-model partitioning**: compatibility only proposes candidates.  Each
+candidate group is checked against :class:`repro.core.cost_model.FusionBudget`
+— the estimated on-chip working set of the batched KernelPlan (row-tile
+buffers + scalar-prefetched access-stream operands) must fit — and a group
+that does not fit is split into the fewest sub-units that do, balanced on
+access-unit cycles (LPT) so no sub-unit's traversal stream becomes the
+straggler.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
+from .. import cost_model
 from ..ops import EmbeddingOp, EmbeddingProgram
 
-FUSABLE_KINDS = ("sls", "spmm", "gather")
+FUSABLE_KINDS = ("sls", "spmm", "gather", "kg")
+
+#: kinds that share the batched CSR loop nest ('kg' = degenerate CSR)
+_CSR_CLASS = {"sls": "sls", "kg": "sls", "spmm": "spmm"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +64,11 @@ class FusedGroup:
     def num_tables(self) -> int:
         return self.op.num_tables
 
+    @property
+    def unit_weight(self) -> float:
+        """⊗-identity marshaled for unweighted members in an upcast group."""
+        return 1.0 if self.op.semiring.mul == "mul" else 0.0
+
 
 def fusion_key(prog: EmbeddingProgram, name: str):
     """Ops with equal keys may fuse; None means never fused."""
@@ -55,13 +76,17 @@ def fusion_key(prog: EmbeddingProgram, name: str):
     if (op.kind not in FUSABLE_KINDS or op.index_format != "offsets"
             or op.num_tables != 1):
         return None
-    return (op.kind, op.emb_len, op.dtype, op.weighted, op.semiring,
-            op.block_rows)
+    # 'weighted' is deliberately absent: mixed groups unit-weight upcast
+    return (_CSR_CLASS.get(op.kind, op.kind), op.emb_len, op.dtype,
+            op.semiring, op.block_rows)
 
 
-def fuse_program(prog: EmbeddingProgram):
-    """Group compatible ops.  Returns ``(units, note)`` where each unit is
-    either ``(name, op)`` for a singleton or a :class:`FusedGroup`."""
+def fuse_program(prog: EmbeddingProgram, vlen: int = 128,
+                 budget: Optional[cost_model.FusionBudget] = None):
+    """Group compatible ops under the resource budget.  Returns
+    ``(units, note)`` where each unit is either ``(name, op)`` for a
+    singleton or a :class:`FusedGroup`."""
+    budget = budget or cost_model.FusionBudget()
     groups: dict = {}
     order: list = []
     for name, _ in prog.ops:
@@ -71,6 +96,7 @@ def fuse_program(prog: EmbeddingProgram):
 
     units: list = []
     emitted: set = set()
+    n_split = 0
     for key, name in order:
         if name in emitted:
             continue
@@ -79,17 +105,78 @@ def fuse_program(prog: EmbeddingProgram):
             units.append((name, prog.op(name)))
             emitted.add(name)
             continue
-        units.append(_build_group(prog, tuple(members)))
+        parts = partition_members(prog, tuple(members), vlen, budget)
+        n_split += len(parts) > 1
+        for part in parts:
+            if len(part) < 2:
+                units.append((part[0], prog.op(part[0])))
+            else:
+                units.append(_build_group(prog, part))
         emitted.update(members)
     n_fused = sum(1 for u in units if isinstance(u, FusedGroup))
     note = (f"{len(prog.ops)} ops -> {len(units)} units "
-            f"({n_fused} fused group{'s' if n_fused != 1 else ''})")
+            f"({n_fused} fused group{'s' if n_fused != 1 else ''}")
+    note += f", {n_split} split by budget)" if n_split else ")"
     return units, note
+
+
+def partition_members(prog: EmbeddingProgram, members: tuple, vlen: int,
+                      budget: cost_model.FusionBudget) -> list:
+    """Split one compatibility group into sub-groups that fit ``budget``,
+    balanced on access-unit cycles.
+
+    Greedy LPT bin packing: members sorted by descending access weight go to
+    the least-loaded sub-unit with operand headroom; a member that fits
+    nowhere opens a new sub-unit.  The result preserves program order within
+    each part and never exceeds the budget (a lone member that alone exceeds
+    it stays a singleton — there is nothing left to split).
+    """
+    ops = {n: prog.op(n) for n in members}
+    if cost_model.fits_budget(ops.values(), vlen, budget):
+        return [tuple(members)]       # the whole group fits: fuse it all
+    tile = max(cost_model.plan_tile_bytes(op, vlen, budget.num_buffers)
+               for op in ops.values())
+    cap = budget.vmem_bytes - tile
+    # conservative: parts inherit the whole group's upcast (a part keeping
+    # any weighted/kg member marshals vals for all of its members)
+    upcast = cost_model.group_needs_vals(ops.values())
+    foot = {n: cost_model.operand_bytes(op, force_vals=upcast)
+            for n, op in ops.items()}
+
+    index = {n: i for i, n in enumerate(members)}
+    weight = {n: cost_model.access_weight(op) for n, op in ops.items()}
+    # LPT over access cycles; ties broken by program order for determinism
+    ranked = sorted(members, key=lambda n: (-weight[n], index[n]))
+    bins: list = []                   # each: [load, operand_bytes, names]
+    for n in ranked:
+        best = None
+        for b in bins:
+            if b[1] + foot[n] <= cap and (best is None or b[0] < best[0]):
+                best = b
+        if best is None:
+            bins.append([weight[n], foot[n], [n]])
+        else:
+            best[0] += weight[n]
+            best[1] += foot[n]
+            best[2].append(n)
+    for b in bins:
+        b[2].sort(key=index.__getitem__)
+    bins.sort(key=lambda b: index[b[2][0]])
+    return [tuple(b[2]) for b in bins]
+
+
+def _effective_avg_lookups(op: EmbeddingOp) -> int:
+    return 1 if op.kind == "kg" else op.avg_lookups
 
 
 def _build_group(prog: EmbeddingProgram, members: tuple) -> FusedGroup:
     ops = tuple(prog.op(n) for n in members)
     proto = ops[0]
+    kind = _CSR_CLASS.get(proto.kind, proto.kind)
+    # unit-weight upcast: a group with any weighted/kg member marshals a
+    # vals stream for every member (⊗-identity for the unweighted ones)
+    weighted = (kind == "sls" and
+                any(op.weighted or op.kind == "kg" for op in ops))
     # stack each distinct table once; shared tables share a base offset
     slot_base: dict = {}
     row_offsets: list = []
@@ -103,13 +190,13 @@ def _build_group(prog: EmbeddingProgram, members: tuple) -> FusedGroup:
     seg_offsets = tuple(int(x) for x in
                         np.cumsum([0] + [op.num_segments for op in ops[:-1]]))
     fused = EmbeddingOp(
-        kind=proto.kind,
+        kind=kind,
         num_segments=sum(op.num_segments for op in ops),
         num_embeddings=next_row,
         emb_len=proto.emb_len,
-        avg_lookups=max(op.avg_lookups for op in ops),
+        avg_lookups=max(_effective_avg_lookups(op) for op in ops),
         block_rows=proto.block_rows,
-        weighted=proto.weighted,
+        weighted=weighted,
         semiring=proto.semiring,
         dtype=proto.dtype,
         index_format="offsets",
@@ -125,23 +212,27 @@ def _build_group(prog: EmbeddingProgram, members: tuple) -> FusedGroup:
 # Runtime marshaling: per-op inputs <-> fused inputs/outputs
 # ---------------------------------------------------------------------------
 
-def fuse_inputs(group: FusedGroup, inputs: dict) -> dict:
-    """Build the fused op's concrete inputs from per-op input dicts.
+def _member_ptrs(op: EmbeddingOp, ins: dict) -> np.ndarray:
+    """CSR offsets of one member (kg: the degenerate one-per-segment CSR)."""
+    if op.kind == "kg":
+        return np.arange(op.num_segments + 1, dtype=np.int64)
+    return np.asarray(ins["ptrs"], np.int64)
 
-    Placement follows the *compile-time* layout (``group.row_offsets``, which
-    honors the program's shared-table annotation): each declared table slot
-    is written once into the stacked buffer, so the runtime marshaling can
-    never diverge from the compiled fused op — regardless of whether shared
-    tables arrive as one array object or equal-valued copies.  Also
-    offset-merges ``ptrs``, concatenates ``idxs``/``vals``, and emits the
-    per-segment ``roff`` table-offset array.
+
+def stack_tables(group: FusedGroup, inputs: dict) -> np.ndarray:
+    """Row-stack the member tables per the compile-time layout.
+
+    Placement follows ``group.row_offsets`` (which honors the program's
+    shared-table annotation): each declared table slot is written once into
+    the stacked buffer, so the runtime marshaling can never diverge from the
+    compiled fused op — regardless of whether shared tables arrive as one
+    array object or equal-valued copies.
     """
     op0 = group.member_ops[0]
     blk = op0.block_rows if op0.kind == "gather" else 1
     total_rows = group.op.num_embeddings * blk
     table = np.empty((total_rows, op0.emb_len), np.dtype(op0.dtype))
     placed: set = set()
-    roff_parts: list = []
     for name, op, base in zip(group.members, group.member_ops,
                               group.row_offsets):
         tbl = np.asarray(inputs[name]["table"])
@@ -152,9 +243,23 @@ def fuse_inputs(group: FusedGroup, inputs: dict) -> dict:
         if base not in placed:      # shared slots are stacked once
             placed.add(base)
             table[row_base:row_base + tbl.shape[0]] = tbl
-        roff_parts.append(np.full(op.num_segments, base, np.int32))
+    return table
 
-    fused_in: dict = {"table": table, "roff": np.concatenate(roff_parts)}
+
+def group_roff(group: FusedGroup) -> np.ndarray:
+    """The per-segment table-offset stream (static per signature)."""
+    return np.concatenate(
+        [np.full(op.num_segments, base, np.int32)
+         for op, base in zip(group.member_ops, group.row_offsets)])
+
+
+def fuse_index_inputs(group: FusedGroup, inputs: dict) -> dict:
+    """The *per-step* half of the marshaling: offset-merged ``ptrs``,
+    concatenated ``idxs``/``vals`` and the ``roff`` stream — everything
+    except the stacked table (see :func:`stack_tables`).  Unweighted members
+    of an upcast group emit a constant ⊗-identity ``vals`` run; kg members
+    emit their degenerate one-per-segment CSR."""
+    fused_in: dict = {"roff": group_roff(group)}
     op0 = group.member_ops[0]
     if op0.kind == "gather":
         fused_in["idxs"] = np.concatenate(
@@ -162,18 +267,34 @@ def fuse_inputs(group: FusedGroup, inputs: dict) -> dict:
         return fused_in
 
     ptrs_parts: list = []
+    idxs_parts: list = []
+    vals_parts: list = []
+    need_vals = group.op.weighted or group.op.kind == "spmm"
     nnz = 0
-    for name in group.members:
-        p = np.asarray(inputs[name]["ptrs"], np.int64)
+    for name, op in zip(group.members, group.member_ops):
+        p = _member_ptrs(op, inputs[name])
         ptrs_parts.append(p[:-1] + nnz if ptrs_parts else p[:-1])
+        idxs_parts.append(np.asarray(inputs[name]["idxs"]))
+        if need_vals:
+            v = inputs[name].get("vals")
+            if v is None:   # unit-weight upcast
+                v = np.full(int(p[-1]), group.unit_weight,
+                            np.dtype(op.dtype))
+            vals_parts.append(np.asarray(v))
         nnz += int(p[-1])
     fused_in["ptrs"] = np.concatenate(
         ptrs_parts + [np.asarray([nnz])]).astype(np.int32)
-    fused_in["idxs"] = np.concatenate(
-        [np.asarray(inputs[n]["idxs"]) for n in group.members])
-    if op0.weighted or op0.kind == "spmm":
-        fused_in["vals"] = np.concatenate(
-            [np.asarray(inputs[n]["vals"]) for n in group.members])
+    fused_in["idxs"] = np.concatenate(idxs_parts)
+    if need_vals:
+        fused_in["vals"] = np.concatenate(vals_parts)
+    return fused_in
+
+
+def fuse_inputs(group: FusedGroup, inputs: dict) -> dict:
+    """Build the fused op's concrete inputs from per-op input dicts (the
+    one-shot path: stacked table + per-step index streams)."""
+    fused_in = fuse_index_inputs(group, inputs)
+    fused_in["table"] = stack_tables(group, inputs)
     return fused_in
 
 

@@ -31,8 +31,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Optional, Union
 
+from .cost_model import FusionBudget
 from .dlc import DlcProgram
 from .ops import EmbeddingOp, EmbeddingProgram, single_op_program
 from .pass_manager import PassManager, PassRecord
@@ -117,14 +119,70 @@ class ProgramCompileResult:
 
 _DEFAULT_PM = PassManager()
 
-# compile cache: (program signature, opt_level, vlen) -> ProgramCompileResult
-_COMPILE_CACHE: dict = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+class BoundedLru:
+    """OrderedDict-backed LRU with hit/miss/eviction counters — the shape of
+    every steady-state cache here (compile artifacts, executors): long-lived
+    servers see a new key per signature they ever compile; without a bound,
+    a shape-diverse workload grows the cache (and what it pins) forever."""
+
+    def __init__(self, limit: int):
+        assert limit >= 1, limit
+        self._entries: "OrderedDict" = OrderedDict()
+        self.limit = limit
+        self.hits = self.misses = self.evictions = 0
+
+    def get(self, key):
+        v = self._entries.get(key)
+        if v is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return v
+
+    def put(self, key, value) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)   # re-insert refreshes recency
+        self._trim()
+
+    def set_limit(self, limit: int) -> int:
+        """Set capacity (entries); returns the previous limit.  Shrinking
+        evicts least-recently-used entries immediately."""
+        assert limit >= 1, limit
+        prev, self.limit = self.limit, limit
+        self._trim()
+        return prev
+
+    def _trim(self) -> None:
+        while len(self._entries) > self.limit:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._entries),
+                "capacity": self.limit}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+# compile cache: (program signature, opt_level, vlen, …) -> ProgramCompileResult
+DEFAULT_COMPILE_CACHE_LIMIT = 64
+
+_COMPILE_CACHE = BoundedLru(DEFAULT_COMPILE_CACHE_LIMIT)
+
+
+def set_compile_cache_limit(limit: int) -> int:
+    return _COMPILE_CACHE.set_limit(limit)
 
 
 def compile_cache_stats() -> dict:
-    s = dict(_CACHE_STATS)
-    s["entries"] = len(_COMPILE_CACHE)
+    s = _COMPILE_CACHE.stats()
     total = s["hits"] + s["misses"]
     s["hit_rate"] = s["hits"] / total if total else 0.0
     return s
@@ -132,7 +190,6 @@ def compile_cache_stats() -> dict:
 
 def clear_compile_cache() -> None:
     _COMPILE_CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
 def _compile_one(op: EmbeddingOp, opt_level: str, vlen: int,
@@ -144,29 +201,32 @@ def _compile_one(op: EmbeddingOp, opt_level: str, vlen: int,
 
 def compile_program(program: EmbeddingProgram, opt_level: str = "O3",
                     vlen: int = 128, pm: Optional[PassManager] = None,
-                    fuse: bool = True,
-                    use_cache: bool = True) -> ProgramCompileResult:
+                    fuse: bool = True, use_cache: bool = True,
+                    budget: Optional[FusionBudget] = None
+                    ) -> ProgramCompileResult:
     """Compile every lookup of a model step as one unit.
 
-    The fusion pass first merges compatible multi-table lookups; each
-    resulting unit then runs the full PassManager pipeline.  Results are
-    memoized on ``(program.signature(), opt_level, vlen)`` so steady-state
+    The fusion pass first merges compatible multi-table lookups — under the
+    ``budget`` resource envelope: a compatibility group whose batched plan
+    would overflow the estimated VMEM working set is split into balanced
+    sub-units (see ``passes/fuse.py``).  Each resulting unit then runs the
+    full PassManager pipeline.  Results are memoized (bounded LRU) on
+    ``(program.signature(), opt_level, vlen, fuse, budget)`` so steady-state
     callers (decode servers, train steps) pay compilation once.
     """
     assert opt_level in OPT_LEVELS, opt_level
-    key = (program.signature(), opt_level, vlen, fuse)
+    budget = budget or FusionBudget()  # canonical: None = the default budget
+    key = (program.signature(), opt_level, vlen, fuse, budget)
     if use_cache and pm is None:
         cached = _COMPILE_CACHE.get(key)
         if cached is not None:
-            _CACHE_STATS["hits"] += 1
             return dataclasses.replace(cached, cache_hit=True)
-        _CACHE_STATS["misses"] += 1
 
     pm_ = pm or _DEFAULT_PM
     records: list = []
     if fuse:
         t0 = time.perf_counter()
-        units_spec, note = fuse_program(program)
+        units_spec, note = fuse_program(program, vlen=vlen, budget=budget)
         records.append(PassRecord("fuse", "program", ran=True,
                                   duration_s=time.perf_counter() - t0,
                                   note=note))
@@ -187,7 +247,7 @@ def compile_program(program: EmbeddingProgram, opt_level: str = "O3",
 
     out = ProgramCompileResult(program, opt_level, vlen, units, records)
     if use_cache and pm is None:
-        _COMPILE_CACHE[key] = out
+        _COMPILE_CACHE.put(key, out)
     return out
 
 

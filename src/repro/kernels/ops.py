@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from .sls import sls_pallas, max_lookups_of
+from .sls import sls_pallas, max_lookups_of, lookup_capacity, grid_capacity
 from .gather import block_gather_pallas
 from .fusedmm import fusedmm_pallas
 from .flash_attention import flash_attention
@@ -52,4 +52,5 @@ def attention(q, k, v, *, causal=True, block_q=128, block_k=128,
 
 
 __all__ = ["sls", "block_gather", "fusedmm", "attention", "ref",
-           "max_lookups_of", "default_interpret"]
+           "max_lookups_of", "lookup_capacity", "grid_capacity",
+           "default_interpret"]

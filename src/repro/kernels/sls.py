@@ -136,3 +136,32 @@ def _round_up(x: int, m: int) -> int:
 
 def max_lookups_of(ptrs: np.ndarray) -> int:
     return int(np.diff(ptrs).max(initial=0)) or 1
+
+
+def lookup_capacity(n: int) -> int:
+    """Round a ragged extent up to its power-of-two capacity bucket (≥ 1).
+
+    ``max_lookups`` and the nnz of the idxs/vals streams are *static* kernel
+    parameters: every distinct value is a distinct jit specialization.  The
+    steady-state executor pads to the bucket so a ragged batch sequence
+    reuses one trace per bucket; the kernel's ``@pl.when(j < n)`` tail mask
+    (and CSR ``ptrs`` bounds for idxs) make the padding slots free of
+    side effects.
+    """
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def grid_capacity(n: int) -> int:
+    """Quarter-octave bucket for the ``max_lookups`` *grid* extent.
+
+    Unlike the operand buffers (power-of-two is right there: the bucket only
+    controls retrace count), every padded ``max_lookups`` slot is a real
+    masked grid step, so a 2× overshoot doubles the kernel's inner loop.
+    Rounding to the next quarter of a power of two keeps the overshoot
+    ≤ 33% while still giving ragged steps only ~4 buckets per octave."""
+    n = max(int(n), 1)
+    if n <= 4:
+        return n
+    q = 1 << ((n - 1).bit_length() - 2)
+    return -(-n // q) * q

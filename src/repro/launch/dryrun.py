@@ -29,7 +29,7 @@ import jax
 
 from ..configs import get_config, list_archs
 from ..roofline.analysis import collective_bytes_from_hlo, roofline_terms
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, mesh_context
 from .steps import SHAPES, build_bundle, shape_applicable
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -65,7 +65,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, remat: str = "dots",
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             bundle = build_bundle(cfg, mesh, shape, remat=remat)
             jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings)
             lowered = jitted.lower(*bundle.args)

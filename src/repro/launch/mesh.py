@@ -10,6 +10,21 @@ from __future__ import annotations
 import jax
 
 
+def axis_types_kw(n_axes: int) -> dict:
+    """``axis_types=`` kwarg for ``jax.make_mesh`` across jax versions:
+    ``jax.sharding.AxisType`` only exists from jax 0.5 on; older versions
+    already default to the Auto semantics we want, so omit the kwarg."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * n_axes}
+
+
+def mesh_context(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` where it exists
+    (jax ≥ 0.6); the Mesh object itself is the context manager before."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod run.
 
@@ -18,9 +33,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def data_axes_of(mesh) -> tuple:
@@ -31,6 +44,5 @@ def make_host_mesh(model_parallel: int = 1):
     """Whatever this host actually has — used by examples and tests."""
     n = len(jax.devices())
     dp = n // model_parallel
-    return jax.make_mesh(
-        (dp, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"),
+                         **axis_types_kw(2))

@@ -259,6 +259,16 @@ class LM:
         from ..core.pipeline import compile_program
         return compile_program(self.embedding_program(batch, seq), opt_level)
 
+    def embedding_executor(self, batch: int, seq: int,
+                           opt_level: str = "O3", **kw):
+        """The steady-state executor of this model's embedding program:
+        compile (cached) + device-resident marshaling cache + double-buffered
+        step loop (:mod:`repro.core.executor`).  Memoized per signature, so
+        every decode wave / train restart gets the same warm executor."""
+        from ..core.executor import executor_for
+        return executor_for(self.embedding_program(batch, seq), opt_level,
+                            **kw)
+
     # ---- init ----
     def init(self, key) -> dict:
         cfg = self.cfg

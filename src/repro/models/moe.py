@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.jax_compat import shard_map
 from ..core.ops import EmbeddingOp
 from .common import ModelConfig, dense_init, _ACTS
 
@@ -211,7 +212,7 @@ def moe_ffn(p, x, cfg: ModelConfig, mesh=None, ep_axis="model",
     # tokens split over data axes on batch and (train/prefill) over the EP
     # axis on sequence
     x_spec = P(dp, ep_axis, None) if seq_split else P(dp, None, None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh, in_specs=(p_specs, x_spec),
         out_specs=(x_spec, P()), check_vma=False)(p, x)
     return out, aux

@@ -67,17 +67,23 @@ class Trainer:
         self._step_fn = None
         self.in_shardings = in_shardings
         self.emb_compiled = None
+        self.emb_executor = None
 
     def _build_step(self):
         lm, opt, tcfg = self.lm, self.opt, self.tcfg
-        # Ember program compile: the train step's irregular lookups (token
+        # Ember steady-state path: the train step's irregular lookups (token
         # embed + label gather + MoE dispatch) compile once per (batch, seq)
-        # signature; restarts and later steps hit the compile cache.
+        # signature, and the ProgramExecutor is memoized alongside —
+        # restarts get both caches back warm.  The lookups themselves run
+        # inside the jitted train step; the executor is the serving-handoff
+        # artifact (consumers drive it with `step`, refreshing tables via
+        # `update_tables` or its per-step identity rebind).
         if self.emb_compiled is None and hasattr(lm, "embedding_program"):
-            from ..core import pipeline as emberc
+            from ..core import executor as emb_exec
             dc = self.data.cfg
-            self.emb_compiled = emberc.compile_program(
+            self.emb_executor = emb_exec.executor_for(
                 lm.embedding_program(dc.global_batch, dc.seq_len))
+            self.emb_compiled = self.emb_executor.compiled
 
         def train_step(params, opt_state, ef, batch):
             loss, grads = jax.value_and_grad(lm.loss)(params, batch)
@@ -141,8 +147,13 @@ class Trainer:
         out = {"final_step": tcfg.total_steps - 1, "losses": losses,
                "state": state}
         if self.emb_compiled is not None:
+            from ..core.executor import executor_cache_stats
             from ..core.pipeline import compile_cache_stats
             out["embedding_compile"] = compile_cache_stats()
+            out["embedding_compile"]["executor_cache"] = \
+                executor_cache_stats()
+            out["embedding_compile"]["executor"] = \
+                dict(self.emb_executor.stats)
         return out
 
 

@@ -12,6 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, get_reduced, list_archs
 from repro.launch import sharding as shd
+from repro.launch.mesh import axis_types_kw
 from repro.launch.steps import SHAPES, make_batch_struct, shape_applicable
 from repro.roofline.analysis import (analytic_flops, collective_bytes_from_hlo,
                                      model_flops, roofline_terms)
@@ -35,8 +36,7 @@ def test_param_specs_structure():
 
 
 def test_sanitize_drops_nondivisible():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("model",), **axis_types_kw(1))
     # shape 6 over model=1 fine; simulate bigger axis via fake mesh entry
     specs = {"a": P("model", None)}
     tree = {"a": jax.ShapeDtypeStruct((6, 4), jnp.float32)}
@@ -113,13 +113,13 @@ def test_dryrun_cell_tiny_mesh():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax
         from repro.configs import get_reduced
+        from repro.launch.mesh import axis_types_kw, mesh_context
         from repro.launch.steps import build_bundle
         import repro.launch.steps as steps
         steps.SHAPES = {"train_4k": (32, 8, "train")}
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kw(2))
         cfg = get_reduced("gemma3-4b")
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             b = build_bundle(cfg, mesh, "train_4k", remat="none")
             c = jax.jit(b.fn, in_shardings=b.in_shardings
                         ).lower(*b.args).compile()

@@ -160,9 +160,11 @@ def test_fused_kernel_plan_is_batched():
 
 
 def test_incompatible_ops_stay_separate():
+    from repro.core.ops import Semiring
     prog = EmbeddingProgram("mix", (
         ("s", EmbeddingOp("sls", 4, 9, 8)),
-        ("k", EmbeddingOp("kg", 4, 9, 8)),          # not a fusable kind
+        ("k", EmbeddingOp("kg", 4, 9, 8,
+                          semiring=Semiring("max"))),  # semiring mismatch
         ("g", EmbeddingOp("gather", 3, 5, 8, block_rows=2)),
         ("s2", EmbeddingOp("sls", 2, 5, 16)),       # emb_len mismatch
     ))

@@ -92,14 +92,13 @@ def test_elastic_checkpoint_reshard(tmp_path):
         import jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.checkpoint import save_checkpoint, restore_checkpoint
-        mesh8 = jax.make_mesh((8,), ("model",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import axis_types_kw
+        mesh8 = jax.make_mesh((8,), ("model",), **axis_types_kw(1))
         x = jnp.arange(64.0).reshape(16, 4)
         xs = jax.device_put(x, NamedSharding(mesh8, P("model", None)))
         save_checkpoint(r"{tmp_path}", 7, {{"w": xs}})
         # restore onto a DIFFERENT mesh (2-way) — elastic rescale
-        mesh2 = jax.make_mesh((2, 4), ("a", "b"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = jax.make_mesh((2, 4), ("a", "b"), **axis_types_kw(2))
         tgt = NamedSharding(mesh2, P("b", None))
         out, step = restore_checkpoint(r"{tmp_path}", {{"w": x}},
                                        shardings={{"w": tgt}})
