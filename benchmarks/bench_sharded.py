@@ -1,0 +1,202 @@
+"""Replicated vs vocab-sharded fused programs: the PR-3 sharding ablation.
+
+The serving-shape LM/MoE embedding program of ``bench_steady_state`` runs
+through the steady-state executor two ways on a multi-device mesh:
+
+    replicated      ProgramExecutor without a mesh — every device would hold
+                    the full fused stacked tables (PR-2 behavior)
+    vocab_sharded   stacked tables partitioned over the mesh's ``model``
+                    axis; the host routes each step's CSR streams to their
+                    owning shards (indices out) and the batched kernel runs
+                    under shard_map with pooled partial rows combined back
+
+Records µs/step for both (cached + overlapped), the per-device
+stacked-table footprint (the point of sharding: ÷ shard count), the
+partitioner's per-shard VMEM audit, and the measured exchange volume into
+``BENCH_sharded.json``.  Asserts the sharded outputs match the replicated
+executor (atol 1e-5), the footprint actually halves on 2 shards, and the
+overlap-vs-cached ordering holds on the sharded path too.
+
+On a single-device host, ``main()`` forces a 2-device CPU mesh
+(``--xla_force_host_platform_device_count``) before importing jax — exactly
+what ``scripts/tier1.sh --fast`` runs.  Under ``benchmarks/run.py`` (jax
+already imported) a 1-device host skips with a report line.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_sharded.json"
+
+
+def _ensure_devices(n: int) -> None:
+    """Force an n-device CPU platform — only effective before jax import."""
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n} {flags}".strip()
+
+
+def run_variants(fast: bool, n_steps: int) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core import cost_model
+    from repro.core.executor import ProgramExecutor
+    from repro.core.pipeline import compile_program
+    from repro.launch.mesh import axis_types_kw
+
+    try:
+        from . import bench_steady_state as bss
+    except ImportError:                      # run as a plain script
+        import bench_steady_state as bss
+
+    shards = min(2, len(jax.devices()))
+    assert shards >= 2, "bench_sharded needs >= 2 devices (see main())"
+    mesh = jax.make_mesh((1, shards), ("data", "model"),
+                         **axis_types_kw(2))
+
+    prog = bss._program(fast)
+    steps = bss._steps(prog, n_steps)
+
+    # same execute unit everywhere (backend_jax XLA path): the ablation
+    # isolates the sharded layout + exchange, not the kernel
+    repl = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
+                           backend="jax")
+    budget = cost_model.FusionBudget(shards=shards)
+    shrd = ProgramExecutor(
+        compile_program(prog, "O3", use_cache=False, budget=budget),
+        backend="jax", mesh=mesh)
+    shrd_async = ProgramExecutor(
+        compile_program(prog, "O3", use_cache=False, budget=budget),
+        backend="jax", mesh=mesh, depth=2)
+
+    # numeric identity: vocab-sharded pooling must reproduce the
+    # single-device executor exactly (modulo f32 reassociation)
+    want = repl.step(steps[0])
+    got = shrd.step(steps[0])
+    for n in want:
+        np.testing.assert_allclose(np.asarray(got[n]), np.asarray(want[n]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"sharded {n} diverged")
+
+    # interleaved best-of-N (see bench_steady_state._time_variants): slow
+    # machine-load drift hits all variants equally, so the overlap/cached
+    # comparison is stable enough to assert on.  The 2-fake-device CPU
+    # collectives are much noisier than single-device dispatch, so the
+    # sharded ablation takes extra rounds for the minima to converge.
+    out = bss._time_variants({
+        "replicated_cached": lambda b: [repl.step(i) for i in b],
+        "sharded_cached": lambda b: [shrd.step(i) for i in b],
+        "sharded_overlap": lambda b: shrd_async.run_steps(b),
+    }, steps, repeats=5)
+    # overlap must not regress on the sharded path either.  On the forced
+    # CPU mesh two in-flight cross-device collectives contend for the same
+    # host threads, so overlap ≈ cached within collective jitter is the
+    # steady state here (the genuine overlap win — 1.8× — is measured on
+    # the single-device path by bench_steady_state, which asserts the tight
+    # 5% bound); anything past jitter is a pipeline regression.
+    assert out["sharded_overlap"] <= out["sharded_cached"] * 1.15, \
+        (f"sharded overlap regressed: {out['sharded_overlap']:.1f}us vs "
+         f"cached {out['sharded_cached']:.1f}us")
+
+    # footprints: what ONE device holds of the fused stacked tables
+    def fused_units(ex):
+        return [u for u in ex._units if u.group is not None]
+
+    repl_dev = sum(int(u.table.nbytes) for u in fused_units(repl))
+    shrd_dev = sum(int(u.table.addressable_shards[0].data.nbytes)
+                   for u in fused_units(shrd))
+    assert shrd_dev <= repl_dev // shards + 4096, \
+        (f"sharding did not divide the footprint: {shrd_dev} vs "
+         f"{repl_dev} / {shards}")
+
+    # partitioner audit, per shard count — the per-shard VMEM budget view
+    audit = []
+    for u in fused_units(shrd):
+        res = cost_model.fused_plan_resources(u.group.member_ops,
+                                              vlen=shrd.compiled.vlen,
+                                              shards=shards)
+        assert res["vmem_bytes"] <= budget.vmem_bytes, \
+            f"fused group {u.unit.names} exceeds the per-shard VMEM budget"
+        audit.append({
+            "members": list(u.unit.names),
+            "vmem_bytes_per_shard": int(res["vmem_bytes"]),
+            "table_bytes": int(res["table_bytes"]),
+            "table_bytes_per_shard": int(res["table_bytes_per_shard"]),
+            "exchange_bytes_per_step": int(res["exchange_bytes"]),
+        })
+
+    steps_run = shrd.stats["steps"]       # counters below are shrd's only
+    return {
+        "config": {"fast": fast, "steps": n_steps, "backend": "jax",
+                   "shards": shards, "ops": len(prog.ops),
+                   "fused_units": len(fused_units(shrd))},
+        "us_per_step": {k: round(v, 1) for k, v in out.items()},
+        "sharded_vs_replicated": round(
+            out["replicated_cached"] / out["sharded_cached"], 3),
+        "overlap_vs_cached": round(
+            out["sharded_cached"] / out["sharded_overlap"], 3),
+        "per_device_table_bytes": {"replicated": repl_dev,
+                                   "vocab_sharded": shrd_dev,
+                                   "ratio": round(shrd_dev / repl_dev, 3)},
+        "exchange_measured": {
+            "index_bytes_per_step":
+                shrd.stats["exchange_index_bytes"] // max(steps_run, 1),
+            "row_bytes_per_step":
+                shrd.stats["exchange_row_bytes"] // max(steps_run, 1),
+        },
+        "executor_stats": dict(shrd_async.stats),
+        "partitioner": {"budget_vmem_bytes": budget.vmem_bytes,
+                        "shards": shards, "groups": audit},
+    }
+
+
+def run(report, fast: bool = True, n_steps: int = 3,
+        out_path: Path = DEFAULT_OUT) -> dict:
+    import jax
+    if len(jax.devices()) < 2:
+        report("sharded/skipped", 0, "needs >= 2 devices")
+        return {}
+    rec = run_variants(fast, n_steps)
+    for k, v in rec["us_per_step"].items():
+        report(f"sharded/{k}_us", v, rec["config"]["shards"])
+    report("sharded/per_device_table_ratio", 0,
+           rec["per_device_table_bytes"]["ratio"])
+    out_path.write_text(json.dumps(rec, indent=2))
+    report("sharded/json", 0, str(out_path))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke sizes (tier1.sh --fast)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--devices", type=int, default=2,
+                    help="forced CPU device count when jax is not yet "
+                         "imported (default 2)")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    _ensure_devices(args.devices)
+    n = args.steps or (3 if args.fast else 8)
+
+    def report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    rec = run(report, fast=args.fast, n_steps=n, out_path=args.out)
+    if rec:
+        pd = rec["per_device_table_bytes"]
+        print(f"vocab sharding: per-device stacked tables "
+              f"{pd['replicated']} -> {pd['vocab_sharded']} bytes "
+              f"({pd['ratio']:.2f}x) on {rec['config']['shards']} shards")
+
+
+if __name__ == "__main__":
+    main()

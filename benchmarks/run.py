@@ -9,7 +9,7 @@ from __future__ import annotations
 import sys
 
 BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
-           "vs_handopt", "lm_step", "steady_state"]
+           "vs_handopt", "lm_step", "steady_state", "sharded"]
 
 
 def main() -> None:
@@ -24,11 +24,19 @@ def main() -> None:
         mod.run(report)
 
     # global compile-cache effectiveness across everything the run compiled
+    from repro.core.executor import executor_cache_stats
     from repro.core.pipeline import compile_cache_stats
     stats = compile_cache_stats()
     report("compile_cache/hits", 0, stats["hits"])
     report("compile_cache/misses", 0, stats["misses"])
     report("compile_cache/hit_rate", 0, round(stats["hit_rate"], 3))
+    # entries broken down by vocab-shard count: a shard-count change that
+    # silently forks cache keys (the sharded cache-key regression) is
+    # visible as unexpected multi-shard histograms here
+    report("compile_cache/entries_by_shards", 0,
+           stats["entries_by_shards"])
+    report("executor_cache/entries_by_shards", 0,
+           executor_cache_stats()["entries_by_shards"])
 
 
 if __name__ == "__main__":

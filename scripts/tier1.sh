@@ -19,7 +19,13 @@ fi
 python -m pytest -x -q "${EXTRA[@]}" "$@"
 
 if [[ "$FAST" == 1 ]]; then
-  # steady-state throughput smoke: asserts the partitioner's VMEM audit and
-  # refreshes BENCH_steady_state.json (small sizes; seconds, not minutes)
+  # steady-state throughput smoke: asserts the partitioner's VMEM audit,
+  # the overlap>=cached ordering, and refreshes BENCH_steady_state.json
+  # (small sizes; seconds, not minutes)
   python benchmarks/bench_steady_state.py --fast
+  # vocab-sharded smoke on a forced 2-device CPU mesh: asserts sharded
+  # numerics == replicated and the per-device footprint halving, refreshes
+  # BENCH_sharded.json
+  XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python benchmarks/bench_sharded.py --fast
 fi

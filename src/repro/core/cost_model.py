@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from .ops import EmbeddingOp
 
 # SVE-512 f32 vector length used throughout the paper's evaluation.
@@ -190,6 +192,11 @@ class FusionBudget:
     #: above it are still legal (skew is reported, not enforced) — balance
     #: is what the partitioner optimizes when it has to split anyway.
     balance_target: float = 8.0
+    #: vocab-shard count of the executor that will run the plan.  The budget
+    #: is PER SHARD: sharding divides the per-device index/vals streams (and
+    #: the stacked-table footprint) by S, so the partitioner splits far
+    #: fewer groups.  Part of the compile-cache key via this dataclass.
+    shards: int = 1
 
 
 def lane_tile(emb_len: int, vlen: int) -> int:
@@ -210,7 +217,8 @@ def plan_tile_bytes(op: EmbeddingOp, vlen: int = 128,
     return (num_buffers + 1) * rows * tile * itemsize
 
 
-def operand_bytes(op: EmbeddingOp, force_vals: bool = False) -> int:
+def operand_bytes(op: EmbeddingOp, force_vals: bool = False,
+                  shards: int = 1) -> int:
     """Scalar-prefetch (access stream) footprint of one member op: the CSR
     ``ptrs``, the expected ``idxs``/``vals`` nnz, and its ``roff`` slot.
 
@@ -218,8 +226,12 @@ def operand_bytes(op: EmbeddingOp, force_vals: bool = False) -> int:
     so EVERY member marshals a vals word per lookup — the group-level
     estimators pass ``group_needs_vals`` here so the audit counts what the
     fused plan actually prefetches.
+
+    ``shards``: vocab-sharded execution re-emits the CSR per shard, so each
+    shard still prefetches the full ``ptrs``/``roff`` control streams but
+    only its ~1/S slice of the index/vals streams.
     """
-    lookups = expected_lookups(op)
+    lookups = -(-expected_lookups(op) // max(shards, 1))
     words = op.num_segments + 1          # ptrs (kg: the degenerate arange)
     words += lookups                     # idxs
     words += op.num_segments             # roff entry per segment
@@ -253,20 +265,51 @@ def execute_weight(op: EmbeddingOp, lvl: int = 3, m: Machine = DEFAULT) -> float
     return expected_lookups(op) * compute_cycles_per_lookup(op, m, lvl)
 
 
+def table_bytes(op: EmbeddingOp, shards: int = 1) -> int:
+    """Stacked-table rows this member contributes per shard (ceil-split of
+    its vocab over ``shards`` — the layout of :mod:`repro.core.shard_plan`).
+    Shared-table dedup happens at stack time; this is the audit's upper
+    bound, consistent with :func:`operand_bytes`."""
+    rows = -(-op.num_embeddings // max(shards, 1))
+    blk = op.block_rows if op.kind == "gather" else 1
+    return rows * blk * op.emb_len * np.dtype(op.dtype).itemsize
+
+
+def exchange_bytes(ops, shards: int = 1) -> dict:
+    """Per-step exchange-volume estimate of running ``ops`` as one fused
+    unit vocab-sharded over ``shards``: indices out (each lookup's index —
+    and its vals word in an upcast group — lands on its owning shard;
+    (S-1)/S of them are remote) and pooled rows back (the psum/pmax ring of
+    the (B, E) partial pools: each shard ships its partials S-1 hops)."""
+    ops = list(ops)
+    if shards <= 1:
+        return {"index_bytes": 0, "row_bytes": 0, "total_bytes": 0}
+    lookups = sum(expected_lookups(op) for op in ops)
+    words = 2 if group_needs_vals(ops) else 1
+    idx = int(lookups * words * 4 * (shards - 1) / shards)
+    rows = sum(op.num_segments * op.emb_len for op in ops) * 4 * (shards - 1)
+    return {"index_bytes": idx, "row_bytes": rows,
+            "total_bytes": idx + rows}
+
+
 def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
                          num_buffers: int = 2,
-                         m: Machine = DEFAULT) -> dict:
+                         m: Machine = DEFAULT, shards: int = 1) -> dict:
     """Resource estimate of compiling ``ops`` as ONE batched KernelPlan.
 
-    Returns vmem_bytes (tiles + scalar operands), the split of that total,
-    total access/execute cycles of the batched stream, and their skew
-    (``queue_balance`` ≥ 1; 1.0 = perfectly balanced DAE queues).
+    Returns vmem_bytes (tiles + scalar operands — PER SHARD when
+    ``shards`` > 1, which is what the partitioner budgets), the split of
+    that total, the stacked-table footprint (total and per shard), the
+    per-step exchange volume of the sharded path, total access/execute
+    cycles of the batched stream, and their skew (``queue_balance`` ≥ 1;
+    1.0 = perfectly balanced DAE queues).
     """
     ops = list(ops)
     assert ops, "empty fusion candidate"
     tiles = max(plan_tile_bytes(op, vlen, num_buffers) for op in ops)
     upcast = group_needs_vals(ops)
-    operands = sum(operand_bytes(op, force_vals=upcast) for op in ops)
+    operands = sum(operand_bytes(op, force_vals=upcast, shards=shards)
+                   for op in ops)
     acc = sum(access_weight(op, lvl, m) for op in ops)
     exe = sum(execute_weight(op, lvl, m) for op in ops)
     hi, lo = max(acc, exe), min(acc, exe)
@@ -274,6 +317,10 @@ def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
         "vmem_bytes": tiles + operands,
         "tile_bytes": tiles,
         "operand_bytes": operands,
+        "table_bytes": sum(table_bytes(op) for op in ops),
+        "table_bytes_per_shard": sum(table_bytes(op, shards) for op in ops),
+        "exchange_bytes": exchange_bytes(ops, shards)["total_bytes"],
+        "shards": shards,
         "access_cycles": acc,
         "execute_cycles": exe,
         "queue_balance": (hi / lo) if lo > 0 else math.inf,
@@ -283,7 +330,8 @@ def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
 def fits_budget(ops, vlen: int = 128,
                 budget: FusionBudget = FusionBudget()) -> bool:
     """May ``ops`` legally compile as one fused unit under ``budget``?"""
-    res = fused_plan_resources(ops, vlen, num_buffers=budget.num_buffers)
+    res = fused_plan_resources(ops, vlen, num_buffers=budget.num_buffers,
+                               shards=budget.shards)
     return res["vmem_bytes"] <= budget.vmem_bytes
 
 

@@ -32,6 +32,16 @@ Three mechanisms, mirroring the DAE queue at program scope:
 ``executor_for`` memoizes executors on the program signature (bounded LRU)
 alongside the compile cache, which is what the runtimes
 (:mod:`repro.runtime.server`, :mod:`repro.runtime.trainer`) hold on to.
+
+**Sharded programs** — pass ``mesh`` (and optionally ``shard_axis``) and the
+fused units' stacked tables are vocab-partitioned over that mesh axis
+(:mod:`repro.core.shard_plan`): each device holds a 1/S slice of every
+stacked slot, the per-step CSR streams are routed to their owning shards by
+the host (the access unit doing the offset-stream exchange, padded to the
+same pow-2/quarter-octave capacity buckets so the exchange is retrace-free),
+and the batched SLS kernel runs under ``shard_map`` with ``seg_base``
+rebased per shard; pooled partial rows combine with ``psum``/``pmax``.
+A mesh of size 1 (or ``mesh=None``) takes exactly the single-device path.
 """
 from __future__ import annotations
 
@@ -48,10 +58,12 @@ import numpy as np
 from ..kernels import ops as kops
 from . import backend_jax as bj
 from . import backend_pallas as bp
+from . import shard_plan as sp
 from .cost_model import FusionBudget
 from .ops import EmbeddingProgram
 from .passes.fuse import FusedGroup, group_roff
-from .pipeline import BoundedLru, ProgramCompileResult, compile_program
+from .pipeline import (BoundedLru, ProgramCompileResult, compile_program,
+                       entries_by_shards)
 
 
 @dataclasses.dataclass(eq=False)  # identity semantics: outputs hold arrays
@@ -77,6 +89,8 @@ class _UnitState:
     table: Optional[jax.Array] = None
     roff: Optional[jax.Array] = None       # fused units only (device)
     roff_np: Optional[np.ndarray] = None   # fused units only (host mirror)
+    layout: Optional[sp.ShardLayout] = None  # sharded executors only
+    seg_caps: Optional[np.ndarray] = None    # sharded gather: owner divisors
     kg_ptrs: dict = dataclasses.field(default_factory=dict)
     # weakrefs to the bound source table arrays: identity comparison that
     # cannot be fooled by CPython id reuse (a collected source reads as
@@ -133,7 +147,8 @@ class ProgramExecutor:
 
     def __init__(self, compiled: ProgramCompileResult,
                  interpret: Optional[bool] = None, depth: int = 2,
-                 backend: str = "pallas"):
+                 backend: str = "pallas", mesh=None,
+                 shard_axis: str = "model"):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
         self.compiled = compiled
@@ -141,6 +156,11 @@ class ProgramExecutor:
                           else interpret)
         self.depth = depth
         self.backend = backend
+        self.shards = sp.shard_count(mesh, shard_axis)
+        # a 1-wide mesh IS the single-device executor (bit-identical path)
+        self.mesh = mesh if self.shards > 1 else None
+        self.shard_axis = shard_axis
+        self._shard_fns: dict = {}        # (unit_idx, bucket) -> jitted call
         self._units = [_UnitState(u) for u in compiled.units]
         self._scratch: dict = {}          # (unit_idx, bucket) -> slot entry
         self._slots_packed: list = []     # slots the current dispatch used
@@ -148,7 +168,8 @@ class ProgramExecutor:
         self._steps = 0
         self.stats = {"steps": 0, "table_stacks": 0, "table_restacks": 0,
                       "table_rebinds": 0, "marshal_hits": 0,
-                      "marshal_misses": 0, "max_inflight": 0}
+                      "marshal_misses": 0, "max_inflight": 0,
+                      "exchange_index_bytes": 0, "exchange_row_bytes": 0}
 
     @property
     def signature(self) -> tuple:
@@ -177,6 +198,19 @@ class ProgramExecutor:
     def _bind_unit(self, u: _UnitState, inputs: dict) -> None:
         srcs = self._src_tables(u, inputs)
         u.src_refs = tuple(weakref.ref(a) for a in srcs)
+        if u.group is not None and self.shards > 1:
+            # vocab-sharded stacked table: every device materializes only
+            # its own 1/S slice of each stacked slot (shard_plan layout)
+            if u.layout is None:
+                u.layout = sp.build_layout(u.group, self.shards)
+                u.roff_np = sp.local_roff(u.group, u.layout)
+                u.roff = sp.put_replicated(u.roff_np, self.mesh)
+                u.seg_caps = sp.segment_caps(u.group, u.layout)
+            u.table = sp.shard_stack_tables(
+                [jnp.asarray(a) for a in srcs], u.layout, self.mesh,
+                self.shard_axis)
+            u.owns_table = True
+            return
         if u.group is None:
             u.table = jnp.asarray(srcs[0])
             u.owns_table = False
@@ -201,21 +235,47 @@ class ProgramExecutor:
         """Refresh the stacked tables after the member tables changed (e.g.
         a train step updated the embeddings).  Device-side concat with the
         old stacked buffer donated where we own it — an in-place update,
-        never a host round trip."""
-        if any(u.table is None for u in self._units):
-            return self.bind_tables(inputs)
-        self.drain()   # a donated buffer must not be read by in-flight steps
+        never a host round trip.
+
+        ``inputs`` may be *partial*: units with any member absent are left
+        untouched (the trainer feeds only the param-backed tables each
+        optimizer step; per-step operand tables such as the MoE capacity
+        buffer stay bound to their last step).  Units already bound to these
+        exact arrays are also skipped, so a steady-state caller can feed
+        every step for free.  An owned multi-slot stack is refreshed by the
+        donated device restack (``table_restacks``); an aliased single
+        table just rebinds the reference (``table_rebinds``) — the
+        train-serve handoff path, which never re-stacks."""
+        todo = []
         for u in self._units:
+            if not all(n in inputs for n in u.unit.names):
+                continue
+            if u.table is not None and \
+                    u.sources_unchanged(self._src_tables(u, inputs)):
+                continue
+            todo.append(u)
+        if not todo:
+            return
+        self.drain()   # a donated buffer must not be read by in-flight steps
+        for u in todo:
+            if u.table is None:
+                self._bind_unit(u, inputs)
+                self.stats["table_stacks"] += 1
+                continue
             srcs = self._src_tables(u, inputs)
             u.src_refs = tuple(weakref.ref(a) for a in srcs)
-            if u.group is None:
-                u.table = jnp.asarray(srcs[0])
-            elif u.owns_table:
+            if u.group is not None and self.shards > 1:
+                u.table = sp.shard_stack_tables(
+                    [jnp.asarray(a) for a in srcs], u.layout, self.mesh,
+                    self.shard_axis)
+                self.stats["table_restacks"] += 1
+            elif u.group is not None and u.owns_table:
                 u.table = _restack(u.table,
                                    tuple(jnp.asarray(a) for a in srcs))
+                self.stats["table_restacks"] += 1
             else:   # bound buffer aliases caller data: never donate it
                 u.table = jnp.asarray(srcs[0])
-            self.stats["table_restacks"] += 1
+                self.stats["table_rebinds"] += 1
 
     # ------------------------------------------------------------------
     # Per-step access-stream marshaling (bucketed, double-buffered)
@@ -228,13 +288,16 @@ class ProgramExecutor:
         (recorded by :meth:`submit`); before a slot is reused, that owner is
         drained if still unresolved — packing step N+k never races an
         in-flight transfer, regardless of how ``submit`` and ``step`` calls
-        interleave.  ``depth`` slots (min 2) keep the steady-state pipeline
-        from ever hitting that drain.
+        interleave.  ``depth + 1`` slots (min 2) keep the steady-state
+        pipeline from ever hitting that drain: with exactly ``depth`` slots
+        a full pipeline reuses the oldest in-flight step's slot mid-submit
+        and stalls there instead of at the cheap backpressure pop — the
+        small-step-count overlap regression.
         """
         key = (unit_idx, bucket)
         entry = self._scratch.get(key)
         if entry is None:
-            n_slots = max(2, self.depth)
+            n_slots = max(2, self.depth + 1)
             entry = {"slots": [
                 {k: np.zeros(shape, dt) for k, (shape, dt) in spec.items()}
                 for _ in range(n_slots)],
@@ -325,6 +388,123 @@ class ProgramExecutor:
         return {"table": u.table, "roff": u.roff,
                 "idxs": jax.device_put(buf["idxs"])}, None
 
+    # ------------------------------------------------------------------
+    # Sharded fused units: host-routed offset-stream exchange + shard_map
+    # ------------------------------------------------------------------
+
+    def _shard_fn(self, idx: int, u: _UnitState, bucket: tuple):
+        """Memoized jit(shard_map) callable per (unit, capacity bucket) —
+        the sharded analogue of the per-bucket kernel trace."""
+        key = (idx, bucket)
+        fn = self._shard_fns.get(key)
+        if fn is not None:
+            return fn
+        op = u.group.op
+        if op.kind == "gather":
+            body = sp.make_gather_body(op, axis=self.shard_axis,
+                                       backend=self.backend,
+                                       interpret=self.interpret)
+            fn = sp.sharded_call(body, self.mesh, self.shard_axis,
+                                 n_bucketed=2, out_ndim=3)
+        else:
+            kind, cap, ml, need_vals = bucket
+            plan = bp.make_plan(u.res)
+            col_tile = plan.col_tile if plan.whole_row_dma else 128
+            body = sp.make_csr_body(op, axis=self.shard_axis,
+                                    backend=self.backend, max_lookups=ml,
+                                    need_vals=need_vals,
+                                    interpret=self.interpret,
+                                    col_tile=col_tile)
+            fn = sp.sharded_call(body, self.mesh, self.shard_axis,
+                                 n_bucketed=3 if need_vals else 2,
+                                 out_ndim=2)
+        self._shard_fns[key] = fn
+        return fn
+
+    def _run_csr_sharded(self, idx: int, u: _UnitState, inputs: dict):
+        """Fused CSR unit over S vocab shards: merge the member streams,
+        route every index to its owning shard (indices out), run the batched
+        kernel per shard under shard_map, combine the partial pools (pooled
+        rows back)."""
+        g = u.group
+        op = g.op
+        need_vals = op.weighted or op.kind == "spmm"
+        segs, gidxs, caps, gvals = [], [], [], []
+        for i, (name, mop, seg_off) in enumerate(
+                zip(g.members, g.member_ops, g.seg_offsets)):
+            ins = inputs[name]
+            if mop.kind == "kg":
+                p = u.kg_ptrs.get(name)
+                if p is None:
+                    p = u.kg_ptrs[name] = np.arange(
+                        mop.num_segments + 1, dtype=np.int64)
+            else:
+                p = np.asarray(ins["ptrs"], np.int64)
+            m_nnz = int(p[-1])
+            segs.append(np.repeat(
+                np.arange(mop.num_segments, dtype=np.int64) + seg_off,
+                np.diff(p)))
+            gidxs.append(np.asarray(ins["idxs"], np.int64))
+            caps.append(np.full(m_nnz, u.layout.member_cap(i), np.int64))
+            if need_vals:
+                v = ins.get("vals")
+                gvals.append(np.full(m_nnz, g.unit_weight,
+                                     np.dtype(op.dtype))
+                             if v is None else np.asarray(v))
+        routed = sp.route_csr(
+            u.layout, op.num_segments, np.concatenate(segs),
+            np.concatenate(gidxs), np.concatenate(caps),
+            np.concatenate(gvals) if need_vals else None)
+        s, cap, ml = self.shards, routed["cap"], routed["max_lookups"]
+        spec = {"ptrs": ((s, op.num_segments + 1), np.int32),
+                "idxs": ((s, cap), np.int32)}
+        if need_vals:
+            spec["vals"] = ((s, cap), np.dtype(op.dtype))
+        buf = self._scratch_for(idx, (cap, ml), spec)
+        buf["ptrs"][:] = routed["ptrs"]
+        bounds = routed["bounds"]
+        for o in range(s):
+            n = bounds[o + 1] - bounds[o]
+            buf["idxs"][o, :n] = routed["idxs"][bounds[o]:bounds[o + 1]]
+            buf["idxs"][o, n:] = 0        # pad rows must stay in bounds
+            if need_vals:
+                buf["vals"][o, :n] = routed["vals"][bounds[o]:bounds[o + 1]]
+                buf["vals"][o, n:] = 0
+        nnz = int(bounds[-1])
+        self.stats["exchange_index_bytes"] += nnz * (8 if need_vals else 4)
+        self.stats["exchange_row_bytes"] += \
+            op.num_segments * op.emb_len * 4 * (s - 1)
+        args = [u.table, u.roff,
+                sp.put_sharded(buf["ptrs"], self.mesh, self.shard_axis),
+                sp.put_sharded(buf["idxs"], self.mesh, self.shard_axis)]
+        if need_vals:
+            args.append(sp.put_sharded(buf["vals"], self.mesh,
+                                       self.shard_axis))
+        fn = self._shard_fn(idx, u, ("csr", cap, ml, need_vals))
+        return fn(*args)
+
+    def _run_gather_sharded(self, idx: int, u: _UnitState, inputs: dict):
+        g = u.group
+        n = g.op.num_segments
+        blk = g.op.block_rows
+        gidx = np.empty(n, np.int64)
+        for name, mop, seg_off in zip(g.members, g.member_ops,
+                                      g.seg_offsets):
+            gidx[seg_off:seg_off + mop.num_segments] = inputs[name]["idxs"]
+        routed = sp.route_gather(u.layout, u.seg_caps, gidx)
+        s = self.shards
+        spec = {"idxs": ((s, n), np.int32), "mask": ((s, n), np.float32)}
+        buf = self._scratch_for(idx, ("gather",), spec)
+        buf["idxs"][:] = routed["idxs"]
+        buf["mask"][:] = routed["mask"]
+        self.stats["exchange_index_bytes"] += n * 8   # idx + mask word
+        self.stats["exchange_row_bytes"] += n * blk * g.op.emb_len * 4 \
+            * (s - 1)
+        fn = self._shard_fn(idx, u, ("gather",))
+        return fn(u.table, u.roff,
+                  sp.put_sharded(buf["idxs"], self.mesh, self.shard_axis),
+                  sp.put_sharded(buf["mask"], self.mesh, self.shard_axis))
+
     def _marshal_single(self, idx: int, u: _UnitState, inputs: dict):
         """Singleton unit: device-transfer the per-step operands, bucketing
         the ragged CSR streams."""
@@ -396,11 +576,16 @@ class ProgramExecutor:
                 dev, ml = self._marshal_single(idx, u, inputs)
                 outs[u.unit.names[0]] = self._execute(u, dev, ml)
                 continue
-            if u.group.op.kind == "gather":
+            if self.shards > 1:
+                fused = (self._run_gather_sharded(idx, u, inputs)
+                         if u.group.op.kind == "gather"
+                         else self._run_csr_sharded(idx, u, inputs))
+            elif u.group.op.kind == "gather":
                 dev, ml = self._marshal_gather(idx, u, inputs)
+                fused = self._execute(u, dev, ml)
             else:
                 dev, ml = self._marshal_csr(idx, u, inputs)
-            fused = self._execute(u, dev, ml)
+                fused = self._execute(u, dev, ml)
             for name, mop, off in zip(u.group.members, u.group.member_ops,
                                       u.group.seg_offsets):
                 outs[name] = fused[off:off + mop.num_segments]
@@ -454,7 +639,8 @@ _EXECUTOR_CACHE = BoundedLru(16)
 def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  vlen: int = 128, interpret: Optional[bool] = None,
                  budget: Optional[FusionBudget] = None,
-                 depth: int = 2, backend: str = "pallas") -> ProgramExecutor:
+                 depth: int = 2, backend: str = "pallas",
+                 mesh=None, shard_axis: str = "model") -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -463,24 +649,37 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     executor whose tables were bound by another caller, which is exactly
     what the per-step table identity check in :meth:`ProgramExecutor.step`
     resolves (same arrays → warm fast path; different model's arrays →
-    automatic rebind)."""
+    automatic rebind).
+
+    ``mesh``/``shard_axis`` select vocab-sharded execution: the fused
+    stacked tables partition over ``mesh.shape[shard_axis]`` shards and the
+    ``budget`` is rewritten to budget per-shard VMEM (``FusionBudget.shards``
+    — part of the compile-cache key, so replicated and sharded plans never
+    collide).  A 1-wide axis (or ``mesh=None``) is the single-device path."""
     # canonicalize defaults so explicit-default calls hit the same entry
     interpret = kops.default_interpret() if interpret is None else interpret
+    shards = sp.shard_count(mesh, shard_axis)
+    if shards == 1:
+        mesh = None
     budget = budget or FusionBudget()
+    if budget.shards != shards:
+        budget = dataclasses.replace(budget, shards=shards)
     key = (program.signature(), opt_level, vlen, interpret, budget, depth,
-           backend)
+           backend, mesh, shard_axis if mesh is not None else None)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
     compiled = compile_program(program, opt_level, vlen=vlen, budget=budget)
     ex = ProgramExecutor(compiled, interpret=interpret, depth=depth,
-                         backend=backend)
+                         backend=backend, mesh=mesh, shard_axis=shard_axis)
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 
 
 def executor_cache_stats() -> dict:
-    return _EXECUTOR_CACHE.stats()
+    s = _EXECUTOR_CACHE.stats()
+    s["entries_by_shards"] = entries_by_shards(_EXECUTOR_CACHE)
+    return s
 
 
 def set_executor_cache_limit(limit: int) -> int:

@@ -138,9 +138,12 @@ def partition_members(prog: EmbeddingProgram, members: tuple, vlen: int,
                for op in ops.values())
     cap = budget.vmem_bytes - tile
     # conservative: parts inherit the whole group's upcast (a part keeping
-    # any weighted/kg member marshals vals for all of its members)
+    # any weighted/kg member marshals vals for all of its members).  The
+    # footprint is per shard — vocab sharding divides the index streams, so
+    # a sharded executor's budget admits much larger groups.
     upcast = cost_model.group_needs_vals(ops.values())
-    foot = {n: cost_model.operand_bytes(op, force_vals=upcast)
+    foot = {n: cost_model.operand_bytes(op, force_vals=upcast,
+                                        shards=budget.shards)
             for n, op in ops.items()}
 
     index = {n: i for i, n in enumerate(members)}

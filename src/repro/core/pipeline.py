@@ -162,6 +162,9 @@ class BoundedLru:
         self._entries.clear()
         self.hits = self.misses = self.evictions = 0
 
+    def keys(self) -> list:
+        return list(self._entries.keys())
+
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "entries": len(self._entries),
@@ -169,6 +172,25 @@ class BoundedLru:
 
     def __len__(self) -> int:
         return len(self._entries)
+
+
+def entries_by_shards(cache: "BoundedLru") -> dict:
+    """Resident-entry histogram keyed by vocab-shard count.
+
+    Both steady-state caches key on a :class:`~repro.core.cost_model.FusionBudget`
+    (which carries ``shards``), so a shard-count change that silently forks
+    cache entries — the classic sharded cache-key regression — shows up here
+    (and in ``benchmarks/run.py``'s stats printout)."""
+    by: dict = {}
+    for key in cache.keys():
+        shards = 1
+        for part in (key if isinstance(key, tuple) else (key,)):
+            s = getattr(part, "shards", None)
+            if isinstance(s, int):
+                shards = s
+                break
+        by[shards] = by.get(shards, 0) + 1
+    return by
 
 
 # compile cache: (program signature, opt_level, vlen, …) -> ProgramCompileResult
@@ -185,6 +207,7 @@ def compile_cache_stats() -> dict:
     s = _COMPILE_CACHE.stats()
     total = s["hits"] + s["misses"]
     s["hit_rate"] = s["hits"] / total if total else 0.0
+    s["entries_by_shards"] = entries_by_shards(_COMPILE_CACHE)
     return s
 
 

@@ -1,0 +1,349 @@
+"""Vocab-sharded fused programs — the distributed half of the executor.
+
+At serving scale one device cannot hold the fused stacked tables, so the
+steady-state executor shards them along the vocab (row) dimension over the
+``model`` axis of the production mesh, FlexEMR-style: the *indices* move to
+the data, the data never moves to the compute.
+
+Layout (one fused unit, S shards)::
+
+    stacked slots:   [ slot0 rows | slot1 rows | ... ]        (replicated PR2)
+    sharded:  shard s holds rows [s·C_t, (s+1)·C_t) of EVERY slot t,
+              C_t = ceil(rows_t / S), stacked in slot order:
+
+        global array (S·L, E), L = Σ_t C_t, NamedSharding P(axis, None)
+        shard s = [ slot0[s·C0:(s+1)·C0] | slot1[s·C1:(s+1)·C1] | ... ]
+
+    so every shard's *local* stacked table has the same shape (SPMD) and the
+    same local slot bases — one replicated ``roff`` stream serves all shards.
+
+Exchange protocol (per step, the access side doing the all-to-all on the
+offset stream):
+
+    1. **indices out** — the host (the access unit of the program-scope DAE
+       machine) buckets the fused CSR stream by owning shard
+       (``owner = idx // C_t``), rebases each index to the owner's local rows
+       (``idx - owner·C_t``) and re-emits one valid CSR per shard over ALL
+       fused segments.  The buckets are padded to the pow-2 nnz /
+       quarter-octave ``max_lookups`` capacities of :mod:`repro.kernels.sls`,
+       so the exchange is retrace-free across ragged steps.  A single
+       sharded ``device_put`` of the ``(S, …)`` buckets realizes the
+       scatter; on a multi-host mesh the identical buckets feed
+       ``jax.lax.all_to_all`` (see docs/executor.md).
+    2. **local pool** — each shard runs the batched SLS kernel (or the XLA
+       reference body) over its local sub-CSR with ``seg_base`` rebased to
+       the local slot bases: partial pooled rows for every segment.
+    3. **pooled rows back** — the partial pools combine across shards with
+       ``psum`` (⊕=add) / ``pmax`` / ``pmin``; locally-empty segments
+       contribute the ⊕-identity, and globally-empty segments are fixed to 0
+       afterwards (the SLS convention), so a shard receiving zero indices
+       for a step is a no-op, not a hazard.
+
+Everything here is pure layout/routing/trace machinery; the executor
+(:mod:`repro.core.executor`) owns the caches and the step loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ops as kops
+from ..launch.sharding import replicated_sharding, table_row_sharding
+from .jax_compat import shard_map
+from .passes.fuse import FusedGroup
+
+_ADD_IDENT = {"add": 0.0, "max": -np.inf, "min": np.inf}
+
+
+def shard_count(mesh, axis: str = "model") -> int:
+    """Size of ``axis`` in ``mesh`` (1 when mesh is None / axis absent) —
+    the executor's single switch between the replicated and sharded paths."""
+    if mesh is None:
+        return 1
+    shape = dict(mesh.shape)
+    return int(shape.get(axis, 1))
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Vocab partition of one fused unit's stacked table over S shards."""
+
+    shards: int
+    blk: int                 # physical rows per index unit (gather blocks)
+    slot_rows: tuple         # index-unit rows of each stacked slot
+    slot_caps: tuple         # per-slot per-shard capacity C_t = ceil(rows/S)
+    slot_local_base: tuple   # local base of each slot (index units)
+    member_slot: tuple       # member i -> slot index
+
+    @property
+    def local_rows(self) -> int:
+        """Index-unit rows of ONE shard's local stacked table (L)."""
+        return sum(self.slot_caps)
+
+    @property
+    def table_bytes_per_shard(self) -> int:
+        return self.local_rows * self.blk * 4  # per f32 column; ×E outside
+
+    def member_cap(self, i: int) -> int:
+        """Ownership divisor of member ``i``'s indices."""
+        return self.slot_caps[self.member_slot[i]]
+
+    def member_local_base(self, i: int) -> int:
+        return self.slot_local_base[self.member_slot[i]]
+
+
+def build_layout(group: FusedGroup, shards: int) -> ShardLayout:
+    """Partition the group's stacked slots over ``shards`` (ceil-split, so
+    ``owner = idx // C_t`` is one integer divide on the access side)."""
+    assert shards >= 1, shards
+    op0 = group.member_ops[0]
+    blk = op0.block_rows if op0.kind == "gather" else 1
+    slot_of_base: dict = {}
+    slot_rows: list = []
+    member_slot: list = []
+    for op, base in zip(group.member_ops, group.row_offsets):
+        if base not in slot_of_base:
+            slot_of_base[base] = len(slot_rows)
+            slot_rows.append(op.num_embeddings)
+        member_slot.append(slot_of_base[base])
+    caps = tuple(-(-r // shards) for r in slot_rows)
+    local_base = tuple(int(x) for x in np.cumsum((0,) + caps[:-1]))
+    return ShardLayout(shards, blk, tuple(slot_rows), caps, local_base,
+                       tuple(member_slot))
+
+
+def interleave_parts_np(parts: list, layout: ShardLayout) -> np.ndarray:
+    """Numpy oracle of the sharded stacking: ``(S·L·blk, E)`` where row block
+    ``s`` is shard ``s``'s local stacked table (slot slices, zero-padded)."""
+    s, blk = layout.shards, layout.blk
+    emb = parts[0].shape[1]
+    out = np.zeros((s * layout.local_rows * blk, emb), parts[0].dtype)
+    for p, rows, cap, base in zip(parts, layout.slot_rows, layout.slot_caps,
+                                  layout.slot_local_base):
+        p = np.asarray(p)
+        assert p.shape[0] == rows * blk, (p.shape, rows, blk)
+        for sh in range(s):
+            lo, hi = sh * cap, min((sh + 1) * cap, rows)
+            if lo >= hi:
+                continue
+            dst = (sh * layout.local_rows + base) * blk
+            out[dst:dst + (hi - lo) * blk] = p[lo * blk:hi * blk]
+    return out
+
+
+def shard_stack_tables(parts: list, layout: ShardLayout, mesh,
+                       axis: str) -> jax.Array:
+    """Device-side sharded stacking: pad each slot to ``S·C_t`` rows, stripe
+    by shard, concatenate the stripes per shard, and place the ``(S·L·blk, E)``
+    result row-sharded over ``axis`` — each device materializes only its own
+    ``(L·blk, E)`` slice."""
+    s, blk = layout.shards, layout.blk
+    stripes = []
+    for p, rows, cap in zip(parts, layout.slot_rows, layout.slot_caps):
+        p = jnp.asarray(p)
+        pad = s * cap * blk - p.shape[0]
+        if pad:
+            p = jnp.pad(p, ((0, pad), (0, 0)))
+        stripes.append(p.reshape(s, cap * blk, p.shape[1]))
+    glob = jnp.concatenate(stripes, axis=1).reshape(
+        s * layout.local_rows * blk, stripes[0].shape[-1])
+    return jax.device_put(glob, table_row_sharding(mesh, axis))
+
+
+def local_roff(group: FusedGroup, layout: ShardLayout) -> np.ndarray:
+    """Per-segment table-offset stream rebased to the LOCAL slot bases —
+    identical on every shard (the layout gives all shards the same local
+    geometry), so one replicated array serves the whole mesh."""
+    return np.concatenate(
+        [np.full(op.num_segments, layout.member_local_base(i), np.int32)
+         for i, op in enumerate(group.member_ops)])
+
+
+# ---------------------------------------------------------------------------
+# Host-side offset-stream routing (step 1 of the exchange)
+# ---------------------------------------------------------------------------
+
+def route_csr(layout: ShardLayout, num_segments: int, seg: np.ndarray,
+              idxs: np.ndarray, caps: np.ndarray,
+              vals: Optional[np.ndarray] = None) -> dict:
+    """Bucket one fused CSR stream by owning shard.
+
+    ``seg``/``idxs``/``caps`` are per-lookup streams (fused segment id,
+    global member-table row, ownership divisor of that member).  Returns the
+    per-shard re-emitted CSR: ``ptrs (S, B+1)``, per-shard nnz, the
+    owner-sorted local indices/values, and the capacity buckets the caller
+    should pad to (pow-2 nnz, quarter-octave max_lookups — the same buckets
+    the single-device kernel retraces on, so the exchange reuses them)."""
+    s = layout.shards
+    owner = idxs // caps
+    local = (idxs - owner * caps).astype(np.int32)
+    counts = np.zeros((s, num_segments), np.int64)
+    if len(seg):
+        np.add.at(counts, (owner, seg), 1)
+    nnz = counts.sum(axis=1)
+    ptrs = np.zeros((s, num_segments + 1), np.int32)
+    np.cumsum(counts, axis=1, out=ptrs[:, 1:])
+    # stable owner sort keeps each shard's stream segment-ordered (the
+    # source stream is), so the re-emitted per-shard CSR is already valid
+    perm = np.argsort(owner, kind="stable")
+    bounds = np.zeros(s + 1, np.int64)
+    np.cumsum(nnz, out=bounds[1:])
+    cap, ml = kops.exchange_capacity(nnz, counts.max(axis=1, initial=0))
+    return {
+        "ptrs": ptrs,
+        "nnz": nnz,
+        "idxs": local[perm],
+        "vals": None if vals is None else np.asarray(vals)[perm],
+        "bounds": bounds,
+        "cap": cap,
+        "max_lookups": ml,
+    }
+
+
+def segment_caps(group: FusedGroup, layout: ShardLayout) -> np.ndarray:
+    """Per-segment ownership divisor (each segment's member's slot cap) —
+    static per signature, computed once at bind time."""
+    return np.concatenate(
+        [np.full(op.num_segments, layout.member_cap(i), np.int64)
+         for i, op in enumerate(group.member_ops)])
+
+
+def route_gather(layout: ShardLayout, caps: np.ndarray,
+                 idxs: np.ndarray) -> dict:
+    """Bucket a fused gather's one-index-per-segment stream: every shard
+    gets the full (B,) index vector with non-owned slots masked out (a
+    gather's 'pool' is the row itself, so the mask IS the partial pool)."""
+    owner = idxs // caps
+    local = (idxs - owner * caps).astype(np.int32)
+    s = layout.shards
+    shard_ids = np.arange(s)[:, None]
+    mask = (owner[None, :] == shard_ids)
+    return {"idxs": np.where(mask, local[None, :], 0).astype(np.int32),
+            "mask": mask.astype(np.float32)}
+
+
+def put_sharded(arr: np.ndarray, mesh, axis: str) -> jax.Array:
+    """Scatter a host ``(S, …)`` bucket array so shard ``s`` holds row ``s``
+    — the single-controller realization of the indices-out all-to-all."""
+    assert arr.ndim == 2, arr.shape   # all exchange buckets are (S, width)
+    return jax.device_put(arr, table_row_sharding(mesh, axis))
+
+
+def put_replicated(arr, mesh) -> jax.Array:
+    a = jnp.asarray(arr)
+    return jax.device_put(a, replicated_sharding(mesh, a.ndim))
+
+
+# ---------------------------------------------------------------------------
+# Device-side execute bodies (steps 2+3: local pool + pooled rows back)
+# ---------------------------------------------------------------------------
+
+def _combine(out, axis: str, add_op: str):
+    if add_op == "add":
+        return jax.lax.psum(out, axis)
+    return (jax.lax.pmax if add_op == "max" else jax.lax.pmin)(out, axis)
+
+
+def jnp_sls_local(table, ptrs, idxs, vals, roff, *, num_segments: int,
+                  add_op: str, mul_op: str):
+    """Traceable XLA reference of the local-shard SLS pool (the ``jax``
+    backend's execute unit under shard_map).  Locally-empty segments yield
+    the ⊕-identity (NOT the SLS zero) so cross-shard merging stays exact;
+    the caller zero-fixes globally-empty segments after the combine."""
+    cap = idxs.shape[0]
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    p32 = ptrs.astype(jnp.int32)
+    seg = jnp.searchsorted(p32[1:], pos, side="right")
+    valid = pos < p32[-1]
+    segc = jnp.minimum(seg, num_segments - 1)
+    rows = jnp.take(table, idxs + jnp.take(roff, segc), axis=0)
+    if vals is not None:
+        w = vals[:, None].astype(rows.dtype)
+        rows = rows * w if mul_op == "mul" else rows + w
+    ident = jnp.asarray(_ADD_IDENT[add_op], rows.dtype)
+    rows = jnp.where(valid[:, None], rows, ident)
+    reduce = {"add": jax.ops.segment_sum, "max": jax.ops.segment_max,
+              "min": jax.ops.segment_min}[add_op]
+    out = reduce(rows, segc, num_segments=num_segments)
+    if add_op != "add":
+        counts = p32[1:] - p32[:-1]
+        out = jnp.where((counts > 0)[:, None], out, ident)
+    return out
+
+
+def make_csr_body(op, *, axis: str, backend: str, max_lookups: int,
+                  need_vals: bool, interpret: bool, col_tile: int):
+    """shard_map body of one fused CSR unit: local pool + pooled-rows-back
+    combine.  The bucketed operands arrive with a leading length-1 shard dim
+    (in_specs P(axis, …)); the table arrives as the local (L·blk, E) slice;
+    ``roff`` replicated."""
+    add_op, mul_op = op.semiring.add, op.semiring.mul
+    nseg = op.num_segments
+
+    def body(table, roff, ptrs, idxs, *maybe_vals):
+        ptrs1, idxs1 = ptrs[0], idxs[0]
+        vals1 = maybe_vals[0][0] if need_vals else None
+        if backend == "pallas":
+            out = kops.sls(table, ptrs1, idxs1, vals1, num_segments=nseg,
+                           max_lookups=max_lookups, add_op=add_op,
+                           mul_op=mul_op, col_tile=col_tile,
+                           interpret=interpret, seg_base=roff)
+            if add_op != "add":
+                # the kernel zeroed locally-empty segments (SLS convention);
+                # restore the ⊕-identity before merging across shards
+                counts = ptrs1[1:] - ptrs1[:-1]
+                out = jnp.where((counts > 0)[:, None],
+                                out, jnp.asarray(_ADD_IDENT[add_op],
+                                                 out.dtype))
+        else:
+            out = jnp_sls_local(table, ptrs1, idxs1, vals1, roff,
+                                num_segments=nseg, add_op=add_op,
+                                mul_op=mul_op)
+        merged = _combine(out, axis, add_op)
+        if add_op == "add":
+            return merged
+        total = jax.lax.psum(ptrs1[1:] - ptrs1[:-1], axis)
+        return jnp.where((total > 0)[:, None], merged, 0.0)
+
+    return body
+
+
+def make_gather_body(op, *, axis: str, backend: str, interpret: bool):
+    """shard_map body of one fused gather unit: masked local block-gather,
+    partial rows back via psum (exactly one shard owns each segment)."""
+    blk = op.block_rows
+
+    def body(table, roff, idxs, mask):
+        i = idxs[0] + roff
+        if backend == "pallas":
+            rows = kops.block_gather(table, i, block_rows=blk,
+                                     interpret=interpret)
+        else:
+            r = i[:, None] * blk + jnp.arange(blk, dtype=i.dtype)[None, :]
+            rows = jnp.take(table, r.reshape(-1), axis=0).reshape(
+                i.shape[0], blk, table.shape[-1])
+        rows = rows * mask[0][:, None, None].astype(rows.dtype)
+        return jax.lax.psum(rows, axis)
+
+    return body
+
+
+def sharded_call(body, mesh, axis: str, n_bucketed: int, out_ndim: int):
+    """jit(shard_map(body)): table row-sharded, ``roff`` replicated,
+    ``n_bucketed`` per-shard operand buckets, replicated pooled output.
+    jit makes the per-capacity-bucket trace the retrace unit, mirroring the
+    single-device executor."""
+    in_specs = (P(axis, None), P(None)) + \
+        tuple(P(axis, *(None,) * 1) for _ in range(n_bucketed))
+    out_specs = P(*(None,) * out_ndim)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False))

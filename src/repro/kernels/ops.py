@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax
 
-from .sls import sls_pallas, max_lookups_of, lookup_capacity, grid_capacity
+from .sls import (sls_pallas, max_lookups_of, lookup_capacity, grid_capacity,
+                  exchange_capacity)
 from .gather import block_gather_pallas
 from .fusedmm import fusedmm_pallas
 from .flash_attention import flash_attention
@@ -53,4 +54,4 @@ def attention(q, k, v, *, causal=True, block_q=128, block_k=128,
 
 __all__ = ["sls", "block_gather", "fusedmm", "attention", "ref",
            "max_lookups_of", "lookup_capacity", "grid_capacity",
-           "default_interpret"]
+           "exchange_capacity", "default_interpret"]

@@ -165,3 +165,16 @@ def grid_capacity(n: int) -> int:
         return n
     q = 1 << ((n - 1).bit_length() - 2)
     return -(-n // q) * q
+
+
+def exchange_capacity(nnz_per_shard, max_seg_per_shard) -> tuple:
+    """Joint ``(nnz_cap, max_lookups)`` bucket of one vocab-sharded exchange
+    step (see :mod:`repro.core.shard_plan`): every shard's routed bucket is
+    padded to the SAME capacities — SPMD needs uniform shapes — so the
+    bucket is the max over shards, rounded with the same pow-2 /
+    quarter-octave rules the single-device executor retraces on.  A shard
+    receiving zero indices still gets the ≥1-slot bucket (all-empty CSR is a
+    valid kernel input)."""
+    nnz = max((int(n) for n in nnz_per_shard), default=0)
+    seg = max((int(n) for n in max_seg_per_shard), default=0)
+    return lookup_capacity(nnz), grid_capacity(seg)

@@ -40,6 +40,15 @@ def data_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def model_shard_count(mesh, axis: str = "model") -> int:
+    """Vocab-shard count the steady-state executor will use on ``mesh`` —
+    the launch-layer alias of :func:`repro.core.shard_plan.shard_count`
+    (one definition; imported lazily so this module stays importable before
+    the kernel stack)."""
+    from ..core.shard_plan import shard_count
+    return shard_count(mesh, axis)
+
+
 def make_host_mesh(model_parallel: int = 1):
     """Whatever this host actually has — used by examples and tests."""
     n = len(jax.devices())

@@ -169,3 +169,21 @@ def sanitize_specs(specs, tree, mesh):
 def to_shardings(mesh, specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Executor table shardings (vocab-partitioned stacked tables)
+# ---------------------------------------------------------------------------
+
+def table_row_sharding(mesh, axis: str = "model") -> NamedSharding:
+    """Row (vocab) sharding of a stacked embedding table — the placement the
+    sharded :class:`~repro.core.executor.ProgramExecutor` gives its fused
+    stacked buffers and routed ``(S, …)`` offset-stream buckets (leading dim
+    = shard)."""
+    return NamedSharding(mesh, P(axis, None))
+
+
+def replicated_sharding(mesh, ndim: int = 1) -> NamedSharding:
+    """Fully-replicated placement (the executor's ``roff`` streams and
+    pooled outputs)."""
+    return NamedSharding(mesh, P(*(None,) * ndim))

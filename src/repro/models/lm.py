@@ -260,14 +260,30 @@ class LM:
         return compile_program(self.embedding_program(batch, seq), opt_level)
 
     def embedding_executor(self, batch: int, seq: int,
-                           opt_level: str = "O3", **kw):
+                           opt_level: str = "O3", mesh="auto", **kw):
         """The steady-state executor of this model's embedding program:
         compile (cached) + device-resident marshaling cache + double-buffered
         step loop (:mod:`repro.core.executor`).  Memoized per signature, so
-        every decode wave / train restart gets the same warm executor."""
+        every decode wave / train restart gets the same warm executor.
+
+        ``mesh="auto"`` inherits the model's ``ShardCtx`` mesh: with a
+        >1-wide model axis the fused stacked tables come back vocab-sharded
+        over it (per-device footprint ÷ shards); pass ``mesh=None`` to force
+        the replicated single-device executor."""
         from ..core.executor import executor_for
+        if mesh == "auto":
+            mesh = self.shard.mesh
         return executor_for(self.embedding_program(batch, seq), opt_level,
+                            mesh=mesh, shard_axis=self.shard.model_axis,
                             **kw)
+
+    def embedding_table_inputs(self, params) -> dict:
+        """The *param-backed* tables of :meth:`embedding_program`, keyed the
+        way :meth:`ProgramExecutor.update_tables` wants them.  Deliberately
+        partial: per-step operand tables (the MoE capacity buffer) are step
+        data, not params — the executor skips their units."""
+        return {"tok_embed": {"table": params["embed"]},
+                "label_gather": {"table": params["embed"]}}
 
     # ---- init ----
     def init(self, key) -> dict:

@@ -43,6 +43,8 @@ class DecodeServer:
         # compile ONCE per (slots, 1) signature and the ProgramExecutor's
         # marshaling cache (device-resident stacked tables + roff streams)
         # is memoized alongside — every later wave is a double cache hit.
+        # A model whose ShardCtx mesh has a >1-wide `model` axis gets the
+        # vocab-sharded executor (stacked tables partitioned over the axis).
         self.emb_compiled = None
         self.emb_executor = None
         self.compile_stats: Optional[dict] = None
@@ -51,15 +53,21 @@ class DecodeServer:
             from ..core import pipeline as emberc
             self._emberc = emberc
             self._emb_exec = emb_exec
-            self.emb_executor = emb_exec.executor_for(
-                lm.embedding_program(batch_slots, 1))
+            self.emb_executor = self._resolve_executor()
             self.emb_compiled = self.emb_executor.compiled
             self.compile_stats = self._gather_compile_stats()
+
+    def _resolve_executor(self):
+        if hasattr(self.lm, "embedding_executor"):
+            return self.lm.embedding_executor(self.slots, 1)
+        return self._emb_exec.executor_for(
+            self.lm.embedding_program(self.slots, 1))
 
     def _gather_compile_stats(self) -> dict:
         s = self._emberc.compile_cache_stats()
         s["executor_cache"] = self._emb_exec.executor_cache_stats()
         s["executor"] = dict(self.emb_executor.stats)
+        s["executor"]["shards"] = self.emb_executor.shards
         return s
 
     def submit(self, req: Request):
@@ -76,8 +84,7 @@ class DecodeServer:
         if self.emb_executor is not None:
             # per-wave re-resolve is free: identical program signature →
             # executor-cache hit (same warm marshaling cache back)
-            self.emb_executor = self._emb_exec.executor_for(
-                self.lm.embedding_program(self.slots, 1))
+            self.emb_executor = self._resolve_executor()
             self.emb_compiled = self.emb_executor.compiled
             self.compile_stats = self._gather_compile_stats()
         for i in range(self.slots):

@@ -76,13 +76,19 @@ class Trainer:
         # signature, and the ProgramExecutor is memoized alongside —
         # restarts get both caches back warm.  The lookups themselves run
         # inside the jitted train step; the executor is the serving-handoff
-        # artifact (consumers drive it with `step`, refreshing tables via
-        # `update_tables` or its per-step identity rebind).
+        # artifact, kept fresh by feeding every optimizer step's params into
+        # `update_tables` (below), so serving never re-stacks.  A model
+        # sharded over a >1-wide `model` axis hands back a vocab-sharded
+        # executor (lm.embedding_executor inherits the ShardCtx mesh).
         if self.emb_compiled is None and hasattr(lm, "embedding_program"):
-            from ..core import executor as emb_exec
             dc = self.data.cfg
-            self.emb_executor = emb_exec.executor_for(
-                lm.embedding_program(dc.global_batch, dc.seq_len))
+            if hasattr(lm, "embedding_executor"):
+                self.emb_executor = lm.embedding_executor(
+                    dc.global_batch, dc.seq_len)
+            else:
+                from ..core import executor as emb_exec
+                self.emb_executor = emb_exec.executor_for(
+                    lm.embedding_program(dc.global_batch, dc.seq_len))
             self.emb_compiled = self.emb_executor.compiled
 
         def train_step(params, opt_state, ef, batch):
@@ -137,6 +143,15 @@ class Trainer:
                 raise StragglerTimeout(
                     f"step {step} took {dt:.1f}s > {tcfg.step_deadline_s}s")
             state = {"params": p, "opt": o, "ef": ef}
+            # train-serve handoff: donate the gradient-updated embed table
+            # straight into the executor's stacked buffer (alias units just
+            # rebind — `table_restacks` stays 0 for the LM program), so a
+            # serving consumer of this executor starts on fresh tables with
+            # zero host re-stacking.
+            if self.emb_executor is not None and \
+                    hasattr(self.lm, "embedding_table_inputs"):
+                self.emb_executor.update_tables(
+                    self.lm.embedding_table_inputs(state["params"]))
             losses.append(loss)
             if on_step:
                 on_step(step, loss)

@@ -135,7 +135,37 @@ def test_update_tables_in_place_refresh():
     for n in want:
         np.testing.assert_allclose(np.asarray(got[n]), want[n],
                                    rtol=1e-4, atol=1e-4)
-    assert ex.stats["table_restacks"] == len(ex.compiled.units)
+    # only the owned multi-slot stack (w,u,k) is a device restack; the
+    # single-slot gather group and the singleton alias-rebind for free
+    owned = sum(1 for u in ex._units if u.owns_table)
+    assert owned == 1
+    assert ex.stats["table_restacks"] == owned
+    assert ex.stats["table_rebinds"] == len(ex.compiled.units) - owned
+    # feeding the SAME arrays again is a no-op (steady-state train feed)
+    ex.update_tables(new)
+    assert ex.stats["table_restacks"] == owned
+    assert ex.stats["table_rebinds"] == len(ex.compiled.units) - owned
+
+
+def test_update_tables_partial_inputs_skip_missing_units():
+    """The trainer feeds only the param-backed tables; units with absent
+    member inputs (per-step operand tables) must be left untouched."""
+    prog = _mixed_program()
+    ex = ProgramExecutor(compile_program(prog, "O3", vlen=4,
+                                         use_cache=False))
+    base = make_program_inputs(prog, seed=0)
+    ex.step(base)
+    new = make_program_inputs(prog, seed=11)
+    ex.update_tables({"solo": new["solo"]})     # only the singleton present
+    assert ex.stats["table_restacks"] == 0
+    assert ex.stats["table_rebinds"] == 1
+    # the untouched units still serve their previously bound tables
+    ins = _step_inputs(prog, 12, base)
+    ins["solo"]["table"] = new["solo"]["table"]
+    got = ex.step(ins)
+    for n, w in program_reference(prog, ins).items():
+        np.testing.assert_allclose(np.asarray(got[n]), w,
+                                   rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -397,6 +427,50 @@ def test_shared_signature_executor_rebinds_other_models_tables():
         np.testing.assert_allclose(np.asarray(got[n]), w,
                                    rtol=1e-4, atol=1e-4)
     clear_executor_cache()
+
+
+def test_trainer_feed_keeps_executor_fresh_no_restacks(tmp_path):
+    """The trainer donates every optimizer step's embed table into the
+    executor via ``update_tables``; for the LM program (token embed + label
+    gather sharing one table) that is an alias rebind, so the train→serve
+    handoff never re-stacks: ``table_restacks`` stays 0 across the whole
+    cycle and the serve step hits the identity fast path."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.data.pipeline import DataConfig, SyntheticTokens
+    from repro.models import LM
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_reduced("stablelm-3b")
+    lm = LM(cfg)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                                      global_batch=4))
+    tcfg = TrainerConfig(total_steps=3, ckpt_every=8,
+                         ckpt_dir=str(tmp_path / "ckpt"))
+    trainer = Trainer(lm, data, tcfg)
+    out = trainer.run(jax.random.PRNGKey(0))
+    ex = trainer.emb_executor
+    n_units = len(ex.compiled.units)
+    # training fed 3 param versions: bind once, then alias rebinds only
+    assert ex.stats["table_stacks"] == n_units
+    assert ex.stats["table_restacks"] == 0
+    rebinds_after_train = ex.stats["table_rebinds"]
+    assert rebinds_after_train == (tcfg.total_steps - 1) * n_units
+
+    # serve: drive the SAME executor with the final params — identity hit,
+    # zero re-stacking, correct lookups
+    params = out["state"]["params"]
+    embed = np.asarray(params["embed"], np.float32)
+    tokens = np.arange(32, dtype=np.int32) % cfg.padded_vocab
+    ins = {"tok_embed": {"table": params["embed"], "idxs": tokens},
+           "label_gather": {"table": params["embed"], "idxs": tokens}}
+    got = ex.step(ins)
+    assert ex.stats["table_stacks"] == n_units
+    assert ex.stats["table_restacks"] == 0
+    assert ex.stats["table_rebinds"] == rebinds_after_train
+    np.testing.assert_allclose(
+        np.asarray(got["tok_embed"], np.float32).reshape(32, -1),
+        embed[tokens], rtol=1e-2, atol=1e-2)
 
 
 def test_fusedmm_singleton_takes_fresh_x_each_step():

@@ -1,0 +1,318 @@
+"""Vocab-sharded fused programs: shard layout/routing math, per-shard cost
+model, mesh-of-size-1 identity with the single-device executor, and (in a
+2-device subprocess, the ``test_launch`` pattern) end-to-end sharded
+numerics — mixed weighted/unweighted + kg fusion, max-semiring merge,
+empty shards, both execute backends, footprint halving, sharded
+``update_tables`` and the executor-cache keying."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model, shard_plan as sp
+from repro.core.executor import (ProgramExecutor, clear_executor_cache,
+                                 executor_cache_stats, executor_for)
+from repro.core.ops import (EmbeddingOp, EmbeddingProgram,
+                            make_program_inputs, program_reference)
+from repro.core.passes import fuse_program
+from repro.core.passes.fuse import FusedGroup
+from repro.core.pipeline import compile_program
+from repro.kernels.sls import exchange_capacity
+
+
+def _csr_group():
+    prog = EmbeddingProgram("g", (
+        ("a", EmbeddingOp("sls", 4, 10, 8, avg_lookups=3)),
+        ("b", EmbeddingOp("sls", 3, 7, 8, avg_lookups=2)),
+    ))
+    units, _ = fuse_program(prog)
+    assert len(units) == 1 and isinstance(units[0], FusedGroup)
+    return units[0]
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+def test_layout_capacities_and_local_bases():
+    g = _csr_group()
+    lay = sp.build_layout(g, shards=2)
+    assert lay.slot_rows == (10, 7)
+    assert lay.slot_caps == (5, 4)        # ceil splits
+    assert lay.slot_local_base == (0, 5)
+    assert lay.local_rows == 9
+    # every shard's local stacked table has the same geometry -> one roff
+    roff = sp.local_roff(g, lay)
+    assert roff.tolist() == [0, 0, 0, 0, 5, 5, 5]
+
+
+def test_interleaved_stack_oracle_reconstructs_rows():
+    g = _csr_group()
+    lay = sp.build_layout(g, shards=2)
+    rng = np.random.default_rng(0)
+    parts = [rng.standard_normal((10, 8)).astype(np.float32),
+             rng.standard_normal((7, 8)).astype(np.float32)]
+    glob = sp.interleave_parts_np(parts, lay)
+    assert glob.shape == (2 * lay.local_rows, 8)
+    # ownership math: global row r of slot t lives on shard r // C_t at
+    # local offset base_t + (r - owner*C_t)
+    for t, part in enumerate(parts):
+        cap = lay.slot_caps[t]
+        base = lay.slot_local_base[t]
+        for r in range(part.shape[0]):
+            o = r // cap
+            local = base + (r - o * cap)
+            np.testing.assert_array_equal(
+                glob[o * lay.local_rows + local], part[r])
+
+
+def test_route_csr_emits_valid_rebased_per_shard_csr():
+    g = _csr_group()
+    lay = sp.build_layout(g, shards=2)
+    num_segments = g.op.num_segments
+    # 7 segments; indices spread over both member tables
+    seg = np.array([0, 0, 1, 3, 4, 4, 5, 6], np.int64)
+    idxs = np.array([9, 2, 5, 0, 6, 1, 3, 4], np.int64)
+    caps = np.array([5, 5, 5, 5, 4, 4, 4, 4], np.int64)  # a: C=5, b: C=4
+    vals = np.arange(8, dtype=np.float32)
+    routed = sp.route_csr(lay, num_segments, seg, idxs, caps, vals)
+    assert routed["cap"] == exchange_capacity(routed["nnz"], [0])[0]
+    # reconstruct: every (seg, local+owner*cap, val) triple must round-trip
+    got = set()
+    for o in range(2):
+        p = routed["ptrs"][o]
+        lo, hi = routed["bounds"][o], routed["bounds"][o + 1]
+        sh_idxs = routed["idxs"][lo:hi]
+        sh_vals = routed["vals"][lo:hi]
+        assert (np.diff(p) >= 0).all() and p[-1] == hi - lo
+        pos = 0
+        for b in range(num_segments):
+            for _ in range(p[b + 1] - p[b]):
+                local = int(sh_idxs[pos])
+                assert 0 <= local < max(lay.slot_caps)
+                got.add((b, o, local, float(sh_vals[pos])))
+                pos += 1
+    want = {(int(s), int(i // c), int(i % c), float(v))
+            for s, i, c, v in zip(seg, idxs, caps, vals)}
+    assert got == want
+
+
+def test_route_csr_empty_stream_and_empty_shard():
+    g = _csr_group()
+    lay = sp.build_layout(g, shards=2)
+    routed = sp.route_csr(lay, 7, np.zeros(0, np.int64),
+                          np.zeros(0, np.int64), np.ones(0, np.int64))
+    assert routed["nnz"].tolist() == [0, 0]
+    assert routed["cap"] == 1 and routed["max_lookups"] == 1
+    # all indices owned by shard 0 -> shard 1 empty but still a valid CSR
+    seg = np.zeros(3, np.int64)
+    idxs = np.array([0, 1, 2], np.int64)
+    routed = sp.route_csr(lay, 7, seg, idxs, np.full(3, 5, np.int64))
+    assert routed["nnz"].tolist() == [3, 0]
+    assert (routed["ptrs"][1] == 0).all()
+
+
+def test_exchange_capacity_buckets():
+    # pow-2 nnz bucket over the shard max; quarter-octave max_lookups
+    assert exchange_capacity([5, 3], [2, 9]) == (8, 12)
+    assert exchange_capacity([0, 0], [0, 0]) == (1, 1)
+    assert exchange_capacity([100, 1], [40, 1]) == (128, 48)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard cost model
+# ---------------------------------------------------------------------------
+
+def test_fused_plan_resources_per_shard():
+    ops = [EmbeddingOp("sls", 64, 4096, 64, avg_lookups=16)
+           for _ in range(4)]
+    r1 = cost_model.fused_plan_resources(ops, shards=1)
+    r4 = cost_model.fused_plan_resources(ops, shards=4)
+    assert r1["exchange_bytes"] == 0
+    assert r4["exchange_bytes"] > 0
+    assert r4["table_bytes_per_shard"] * 4 == r1["table_bytes"]
+    assert r4["vmem_bytes"] < r1["vmem_bytes"]       # per-shard streams
+    assert r4["tile_bytes"] == r1["tile_bytes"]      # tiles don't shard
+
+
+def test_sharded_budget_splits_fewer_groups():
+    prog = EmbeddingProgram("giant", tuple(
+        (f"t{i}", EmbeddingOp("sls", 2000, 64, 16, avg_lookups=16))
+        for i in range(8)))
+    tight = cost_model.FusionBudget(vmem_bytes=400_000)
+    units_repl, _ = fuse_program(prog, vlen=128, budget=tight)
+    sharded = cost_model.FusionBudget(vmem_bytes=400_000, shards=8)
+    units_shrd, _ = fuse_program(prog, vlen=128, budget=sharded)
+    n_repl = len(units_repl)
+    n_shrd = len(units_shrd)
+    assert n_shrd < n_repl, (n_shrd, n_repl)  # per-shard budget: less split
+    for u in units_shrd:
+        if isinstance(u, FusedGroup):
+            assert cost_model.fits_budget(u.member_ops, 128, sharded)
+
+
+def test_budget_shards_in_compile_and_executor_cache_keys():
+    clear_executor_cache()
+    prog = EmbeddingProgram("p", (("a", EmbeddingOp("sls", 4, 9, 8)),))
+    b1 = cost_model.FusionBudget()
+    b2 = cost_model.FusionBudget(shards=2)
+    r1 = compile_program(prog, "O1", vlen=4, budget=b1)
+    r2 = compile_program(prog, "O1", vlen=4, budget=b2)
+    assert not r2.cache_hit                    # distinct cache entries
+    executor_for(prog, "O1", vlen=4, budget=b1)
+    by = executor_cache_stats()["entries_by_shards"]
+    assert by.get(1, 0) >= 1
+    clear_executor_cache()
+
+
+# ---------------------------------------------------------------------------
+# Mesh of size 1 == the single-device executor, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_size_one_mesh_is_single_device_path():
+    import jax
+    from repro.launch.mesh import axis_types_kw
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **axis_types_kw(2))
+    prog = EmbeddingProgram("p", (
+        ("a", EmbeddingOp("sls", 4, 9, 8, avg_lookups=3)),
+        ("b", EmbeddingOp("sls", 3, 7, 8, avg_lookups=2)),
+    ))
+    pres = compile_program(prog, "O3", vlen=4, use_cache=False)
+    ex_plain = ProgramExecutor(pres)
+    ex_mesh = ProgramExecutor(pres, mesh=mesh)
+    assert ex_mesh.shards == 1 and ex_mesh.mesh is None
+    ins = make_program_inputs(prog, seed=0)
+    got_p, got_m = ex_plain.step(ins), ex_mesh.step(ins)
+    for n in got_p:
+        np.testing.assert_array_equal(np.asarray(got_p[n]),
+                                      np.asarray(got_m[n]))
+    assert ex_plain.stats == ex_mesh.stats
+    # executor_for canonicalizes the 1-wide mesh to the replicated key
+    clear_executor_cache()
+    e1 = executor_for(prog, "O3", vlen=4)
+    e2 = executor_for(prog, "O3", vlen=4, mesh=mesh)
+    assert e2 is e1
+    clear_executor_cache()
+
+
+def test_shard_count_helper():
+    import jax
+    from repro.launch.mesh import axis_types_kw, model_shard_count
+    assert sp.shard_count(None) == 1
+    assert model_shard_count(None) == 1
+    mesh = jax.make_mesh((1,), ("data",), **axis_types_kw(1))
+    assert sp.shard_count(mesh, "model") == 1   # axis absent
+
+
+# ---------------------------------------------------------------------------
+# End-to-end on a real 2-device mesh (subprocess; test_launch pattern)
+# ---------------------------------------------------------------------------
+
+def test_sharded_executor_two_devices():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax
+        import numpy as np
+        from repro.core import cost_model
+        from repro.core.executor import (ProgramExecutor,
+                                         clear_executor_cache, executor_for)
+        from repro.core.ops import (EmbeddingOp, EmbeddingProgram, Semiring,
+                                    make_program_inputs, program_reference)
+        from repro.core.pipeline import compile_program
+        from repro.launch.mesh import axis_types_kw, model_shard_count
+
+        mesh = jax.make_mesh((1, 2), ("data", "model"), **axis_types_kw(2))
+        assert model_shard_count(mesh) == 2
+
+        # weighted + unweighted + kg fused CSR, shared-table gather group,
+        # and an unfusable singleton — the full fusion surface, sharded
+        prog = EmbeddingProgram("mixed", (
+            ("w", EmbeddingOp("sls", 5, 9, 8, avg_lookups=3, weighted=True)),
+            ("u", EmbeddingOp("sls", 4, 7, 8, avg_lookups=2)),
+            ("k", EmbeddingOp("kg", 6, 11, 8)),
+            ("g1", EmbeddingOp("gather", 6, 20, 8)),
+            ("g2", EmbeddingOp("gather", 6, 20, 8)),
+            ("solo", EmbeddingOp("spmm", 3, 5, 16, avg_lookups=2)),
+        ), shared_tables=(("g1", "g2"),))
+
+        for backend in ("jax", "pallas"):
+            pres = compile_program(prog, "O3", vlen=4, use_cache=False)
+            ex = ProgramExecutor(pres, backend=backend, mesh=mesh)
+            assert ex.shards == 2
+            base = make_program_inputs(prog, seed=0)
+            for seed in (0, 3):
+                ins = make_program_inputs(prog, seed=seed)
+                for n in ins:        # steady tables, fresh index streams
+                    for k in ("table", "x"):
+                        if k in base[n]:
+                            ins[n][k] = base[n][k]
+                got = ex.step(ins)
+                want = program_reference(prog, ins)
+                for n in want:
+                    np.testing.assert_allclose(
+                        np.asarray(got[n]), want[n], rtol=1e-5, atol=1e-5,
+                        err_msg=f"{n} {backend}")
+            assert ex.stats["table_rebinds"] == 0
+            assert ex.stats["exchange_index_bytes"] > 0
+            # footprint: each device holds ~half of each fused stack
+            for u in ex._units:
+                if u.group is None:
+                    continue
+                shards_b = [s.data.nbytes
+                            for s in u.table.addressable_shards]
+                assert len(shards_b) == 2 and shards_b[0] == shards_b[1]
+
+        # max-semiring fused group (sls + kg) with an empty shard: the
+        # cross-shard pmax merge must keep identity/zero conventions exact
+        prog2 = EmbeddingProgram("maxmix", (
+            ("a", EmbeddingOp("sls", 4, 8, 8, avg_lookups=3,
+                              semiring=Semiring("max"))),
+            ("m", EmbeddingOp("kg", 4, 8, 8, semiring=Semiring("max"))),
+        ))
+        pres2 = compile_program(prog2, "O3", vlen=4, use_cache=False)
+        for backend in ("jax", "pallas"):
+            ex2 = ProgramExecutor(pres2, backend=backend, mesh=mesh)
+            ins = make_program_inputs(prog2, seed=1)
+            for n in ("a", "m"):
+                ins[n]["idxs"] = np.minimum(ins[n]["idxs"], 3)  # shard 1 idle
+            got = ex2.step(ins)
+            for n, w in program_reference(prog2, ins).items():
+                np.testing.assert_allclose(np.asarray(got[n]), w,
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{n} {backend} max")
+
+        # sharded update_tables: device-side re-stack of the sharded layout
+        prog3 = EmbeddingProgram("upd", (
+            ("a", EmbeddingOp("sls", 4, 10, 8, avg_lookups=3)),
+            ("b", EmbeddingOp("sls", 3, 7, 8, avg_lookups=2)),
+        ))
+        ex3 = ProgramExecutor(compile_program(prog3, "O3", vlen=4,
+                                              use_cache=False),
+                              backend="jax", mesh=mesh)
+        ex3.step(make_program_inputs(prog3, seed=0))
+        new = make_program_inputs(prog3, seed=7)
+        ex3.update_tables(new)
+        assert ex3.stats["table_restacks"] == 1
+        got = ex3.step(new)
+        for n, w in program_reference(prog3, new).items():
+            np.testing.assert_allclose(np.asarray(got[n]), w,
+                                       rtol=1e-5, atol=1e-5)
+
+        # executor_for: sharded and replicated executors never collide
+        clear_executor_cache()
+        e_repl = executor_for(prog3, "O3", vlen=4, backend="jax")
+        e_shrd = executor_for(prog3, "O3", vlen=4, backend="jax", mesh=mesh)
+        assert e_repl is not e_shrd and e_shrd.shards == 2
+        assert e_shrd.compiled.units[0].result.op is not None
+        assert executor_for(prog3, "O3", vlen=4, backend="jax",
+                            mesh=mesh) is e_shrd
+        print("SHARDED_EXEC_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       env={**__import__("os").environ, "PYTHONPATH": "src"},
+                       cwd="/root/repo", timeout=600)
+    assert "SHARDED_EXEC_OK" in r.stdout, r.stderr[-3000:]
