@@ -1,0 +1,261 @@
+"""Locality-aware hot/cold vocab sharding on a Zipf workload: the PR-4
+access-plan ablation.
+
+A DLRM-style bank of SLS tables serves a *stationary* Zipf(1.05) lookup
+stream (the paper's high-locality class; DRM-style skew) through the
+steady-state executor three ways on a 2-device mesh:
+
+    replicated      no mesh — every device holds the full stacked tables
+    interleaved     PR-3 vocab sharding: every row ceil-split over the
+                    shards, EVERY lookup routed to its owning shard
+    hot_cold        PR-4 AccessPlan sharding: the Zipf head of each vocab
+                    (classified from a calibration trace by
+                    ``data/locality.py`` reuse scores, sized to
+                    ``FusionBudget.hot_slab_bytes``) is replicated on every
+                    shard — those lookups stay local — while the tail stays
+                    interleave-sharded
+
+All three must produce identical outputs (atol 1e-5).  The point of the
+benchmark: the routed exchange volume (indices out) of ``hot_cold`` must be
+>= 2x smaller than ``interleaved`` on the skewed stream, for a hot slab
+costing a small fraction of the table bytes.  Records per-variant us/step,
+measured + estimated exchange bytes, and the hot-slab audit into
+``BENCH_locality.json``.
+
+On a single-device host ``main()`` re-execs itself in a subprocess with a
+forced 2-device CPU platform (the env mutation never touches this
+process — see ``bench_sharded.respawn_with_devices``).  Under
+``benchmarks/run.py`` a 1-device host skips with a report line.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_locality.json"
+
+ZIPF_ALPHA = 1.05
+HOT_ROW_FRACTION = 8       # hot slab budget = rows/8 per table
+
+
+def _respawn(devices: int) -> int:
+    try:
+        from .bench_sharded import respawn_with_devices
+    except ImportError:
+        from bench_sharded import respawn_with_devices
+    return respawn_with_devices(devices)
+
+
+def _zipf_sampler(rows: int, seed: int):
+    """A stationary Zipf(1.05) row distribution: ONE permutation maps ranks
+    to rows for the whole workload (steps and calibration draw from the
+    same skewed head — the serving reality hot/cold sharding exploits)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(rows)
+    p = np.arange(1, rows + 1, dtype=np.float64) ** (-ZIPF_ALPHA)
+    p /= p.sum()
+
+    def draw(step_rng, n):
+        return perm[step_rng.choice(rows, size=n, p=p)].astype(np.int32)
+
+    return draw
+
+
+def build_workload(fast: bool, n_steps: int, seed: int = 0):
+    """(program, steps, calibration traces): shared tables once, fresh
+    Zipf index streams per step, and a held-out calibration trace per op."""
+    import numpy as np
+
+    from repro.core.ops import EmbeddingOp, EmbeddingProgram
+
+    if fast:
+        n_tbl, segs, rows, d, avg = 2, 16, 2048, 64, 8
+    else:
+        n_tbl, segs, rows, d, avg = 4, 32, 8192, 64, 8
+    prog = EmbeddingProgram("locality", tuple(
+        (f"tbl{i}", EmbeddingOp("sls", segs, rows, d, avg_lookups=avg))
+        for i in range(n_tbl)))
+
+    rng = np.random.default_rng(seed)
+    samplers = {name: _zipf_sampler(op.num_embeddings, seed + 17 * i)
+                for i, (name, op) in enumerate(prog.ops)}
+    tables = {name: rng.standard_normal(
+        (op.num_embeddings, op.emb_len)).astype(np.float32)
+        for name, op in prog.ops}
+
+    steps = []
+    for _ in range(n_steps):
+        ins = {}
+        for name, op in prog.ops:
+            lens = rng.poisson(op.avg_lookups, size=op.num_segments)
+            ptrs = np.zeros(op.num_segments + 1, np.int64)
+            np.cumsum(lens, out=ptrs[1:])
+            ins[name] = {"table": tables[name], "ptrs": ptrs,
+                         "idxs": samplers[name](rng, int(ptrs[-1]))}
+        steps.append(ins)
+
+    cal_rng = np.random.default_rng(seed + 999)   # held-out calibration
+    traces = {name: samplers[name](cal_rng, 20_000) for name, _ in prog.ops}
+    return prog, steps, traces
+
+
+def run_variants(fast: bool, n_steps: int) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core import access_plan as ap
+    from repro.core import cost_model
+    from repro.core.executor import ProgramExecutor
+    from repro.core.pipeline import compile_program
+    from repro.launch.mesh import axis_types_kw
+
+    try:
+        from . import bench_steady_state as bss
+    except ImportError:
+        import bench_steady_state as bss
+
+    shards = min(2, len(jax.devices()))
+    assert shards >= 2, "bench_locality needs >= 2 devices (see main())"
+    mesh = jax.make_mesh((1, shards), ("data", "model"),
+                         **axis_types_kw(2))
+
+    prog, steps, traces = build_workload(fast, n_steps)
+    op0 = prog.ops[0][1]
+    hot_slab_bytes = (op0.num_embeddings // HOT_ROW_FRACTION) * \
+        op0.emb_len * 4
+    budget_hot = cost_model.FusionBudget(shards=shards,
+                                         hot_slab_bytes=hot_slab_bytes)
+    hot = ap.hot_rows_from_traces(prog, traces, budget_hot)
+    assert hot, "the Zipf stream must classify a hot head"
+
+    # same execute unit everywhere (backend_jax XLA path): the ablation
+    # isolates the access-plan layout + exchange, not the kernel
+    repl = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
+                           backend="jax")
+    inter = ProgramExecutor(
+        compile_program(prog, "O3", use_cache=False,
+                        budget=cost_model.FusionBudget(shards=shards)),
+        backend="jax", mesh=mesh)
+    hotx = ProgramExecutor(
+        compile_program(prog, "O3", use_cache=False, budget=budget_hot,
+                        hot_rows=hot),
+        backend="jax", mesh=mesh, hot_rows=hot)
+
+    # numeric identity on every step: replication must be invisible
+    for k, ins in enumerate(steps):
+        want = repl.step(ins)
+        got_i, got_h = inter.step(ins), hotx.step(ins)
+        for n in want:
+            np.testing.assert_allclose(
+                np.asarray(got_i[n]), np.asarray(want[n]),
+                rtol=1e-5, atol=1e-5, err_msg=f"interleaved {n} step {k}")
+            np.testing.assert_allclose(
+                np.asarray(got_h[n]), np.asarray(want[n]),
+                rtol=1e-5, atol=1e-5, err_msg=f"hot_cold {n} step {k}")
+
+    # routed exchange volume (indices out), measured per step
+    steps_run = inter.stats["steps"]
+    idx_inter = inter.stats["exchange_index_bytes"] // steps_run
+    idx_hot = hotx.stats["exchange_index_bytes"] // steps_run
+    reduction = idx_inter / max(idx_hot, 1)
+    assert reduction >= 2.0, \
+        (f"hot/cold sharding must cut routed exchange bytes >= 2x on "
+         f"Zipf({ZIPF_ALPHA}): interleaved {idx_inter} vs hot {idx_hot} "
+         f"B/step ({reduction:.2f}x)")
+
+    aps = hotx.access_plan_stats()
+    hot_frac = aps["hot_traffic_fraction"]
+    audit = []
+    for u in hotx._units:
+        if u.group is None:
+            continue
+        res = cost_model.fused_plan_resources(
+            u.group.member_ops, vlen=hotx.compiled.vlen, shards=shards,
+            hot_rows_total=u.plan.hot_rows_total,
+            hot_traffic_fraction=hot_frac)
+        audit.append({
+            "members": list(u.unit.names),
+            "hot_rows": u.plan.hot_rows_total,
+            "hot_slab_bytes": int(res["hot_slab_bytes"]),
+            "table_bytes_per_shard": int(res["table_bytes_per_shard"]),
+            "exchange_bytes_est": int(res["exchange_bytes"]),
+            "exchange_savings_bytes_est": int(
+                res["exchange_savings_bytes"]),
+        })
+
+    out = bss._time_variants({
+        "replicated": lambda b: [repl.step(i) for i in b],
+        "interleaved": lambda b: [inter.step(i) for i in b],
+        "hot_cold": lambda b: [hotx.step(i) for i in b],
+    }, steps, repeats=5)
+
+    return {
+        "config": {"fast": fast, "steps": n_steps, "backend": "jax",
+                   "shards": shards, "zipf_alpha": ZIPF_ALPHA,
+                   "ops": len(prog.ops),
+                   "hot_slab_budget_bytes": hot_slab_bytes},
+        "us_per_step": {k: round(v, 1) for k, v in out.items()},
+        "exchange_index_bytes_per_step": {
+            "interleaved": int(idx_inter),
+            "hot_cold": int(idx_hot),
+            "reduction": round(reduction, 2),
+        },
+        "hot_traffic_fraction": hot_frac,
+        "access_plans": aps,
+        "hot_slab_audit": audit,
+    }
+
+
+def run(report, fast: bool = True, n_steps: int = 3,
+        out_path: Path = DEFAULT_OUT) -> dict:
+    import jax
+    if len(jax.devices()) < 2:
+        report("locality/skipped", 0, "needs >= 2 devices")
+        return {}
+    rec = run_variants(fast, n_steps)
+    for k, v in rec["us_per_step"].items():
+        report(f"locality/{k}_us", v, rec["config"]["shards"])
+    report("locality/exchange_reduction", 0,
+           rec["exchange_index_bytes_per_step"]["reduction"])
+    report("locality/hot_traffic_fraction", 0,
+           rec["hot_traffic_fraction"])
+    out_path.write_text(json.dumps(rec, indent=2))
+    report("locality/json", 0, str(out_path))
+    return rec
+
+
+def main() -> None:
+    ap_ = argparse.ArgumentParser(description=__doc__)
+    ap_.add_argument("--fast", action="store_true",
+                     help="smoke sizes (tier1.sh --fast)")
+    ap_.add_argument("--steps", type=int, default=None)
+    ap_.add_argument("--devices", type=int, default=2,
+                     help="forced CPU device count (default 2); applied in "
+                          "a respawned child process, never this one")
+    ap_.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap_.add_argument("--no-respawn", action="store_true",
+                     help="internal: already running with the forced "
+                          "device environment")
+    args = ap_.parse_args()
+    if not args.no_respawn and "jax" not in sys.modules:
+        sys.exit(_respawn(args.devices))
+    n = args.steps or (3 if args.fast else 8)
+
+    def report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    rec = run(report, fast=args.fast, n_steps=n, out_path=args.out)
+    if rec:
+        ex = rec["exchange_index_bytes_per_step"]
+        print(f"hot/cold sharding: routed exchange "
+              f"{ex['interleaved']} -> {ex['hot_cold']} B/step "
+              f"({ex['reduction']:.2f}x less) with "
+              f"{rec['hot_traffic_fraction']:.0%} of lookups served from "
+              f"the replicated hot slab")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,30 +17,39 @@ partitioner's per-shard VMEM audit, and the measured exchange volume into
 executor (atol 1e-5), the footprint actually halves on 2 shards, and the
 overlap-vs-cached ordering holds on the sharded path too.
 
-On a single-device host, ``main()`` forces a 2-device CPU mesh
-(``--xla_force_host_platform_device_count``) before importing jax — exactly
-what ``scripts/tier1.sh --fast`` runs.  Under ``benchmarks/run.py`` (jax
-already imported) a 1-device host skips with a report line.
+On a single-device host, ``main()`` re-execs itself in a *subprocess* whose
+environment forces a 2-device CPU mesh
+(``--xla_force_host_platform_device_count``) — the mutation never touches
+this process's ``os.environ``, so importing jax later in the same process
+(e.g. a harness running several benchmarks) keeps seeing the real device
+count.  Under ``benchmarks/run.py`` (jax already imported) a 1-device host
+skips with a report line.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 from pathlib import Path
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_sharded.json"
 
 
-def _ensure_devices(n: int) -> None:
-    """Force an n-device CPU platform — only effective before jax import."""
-    if "jax" in sys.modules:
-        return
-    flags = os.environ.get("XLA_FLAGS", "")
+def respawn_with_devices(n: int) -> int:
+    """Run this script again in a child process with an n-device CPU
+    platform forced via its (copied) environment; returns the exit code.
+    The forced ``XLA_FLAGS`` / device count never leak into the calling
+    process's environment or its later jax import."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = \
+        env["XLA_FLAGS"] = \
             f"--xla_force_host_platform_device_count={n} {flags}".strip()
+    return subprocess.run(
+        [sys.executable, sys.argv[0], *sys.argv[1:], "--no-respawn"],
+        env=env).returncode
 
 
 def run_variants(fast: bool, n_steps: int) -> dict:
@@ -180,11 +189,15 @@ def main() -> None:
                     help="smoke sizes (tier1.sh --fast)")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--devices", type=int, default=2,
-                    help="forced CPU device count when jax is not yet "
-                         "imported (default 2)")
+                    help="forced CPU device count (default 2); applied in "
+                         "a respawned child process, never this one")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--no-respawn", action="store_true",
+                    help="internal: already running with the forced "
+                         "device environment")
     args = ap.parse_args()
-    _ensure_devices(args.devices)
+    if not args.no_respawn and "jax" not in sys.modules:
+        sys.exit(respawn_with_devices(args.devices))
     n = args.steps or (3 if args.fast else 8)
 
     def report(name, us, derived):

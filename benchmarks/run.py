@@ -2,22 +2,46 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [characterization|dae_potential|ablation|
-blocksparse|vs_handopt|lm_step]``.
+blocksparse|vs_handopt|lm_step|steady_state|sharded|locality]``.
+
+``--json PATH`` additionally writes every reported row (plus the cache
+stats) as machine-readable JSON — what CI consumes; ``-`` writes JSON to
+stdout instead of the CSV.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
-           "vs_handopt", "lm_step", "steady_state", "sharded"]
+           "vs_handopt", "lm_step", "steady_state", "sharded", "locality"]
 
 
 def main() -> None:
-    selected = sys.argv[1:] or BENCHES
-    print("name,us_per_call,derived")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("benches", nargs="*", metavar="bench",
+                    help=f"subset of benchmarks (default: all of "
+                         f"{', '.join(BENCHES)})")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write rows as JSON to this path ('-' = stdout, "
+                         "suppressing the CSV)")
+    args = ap.parse_args()
+    selected = args.benches or BENCHES
+    unknown = [b for b in selected if b not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; choose from {BENCHES}")
+    json_to_stdout = args.json_out == "-"
+    rows: list = []
 
     def report(name, us, derived):
-        print(f"{name},{us:.1f},{derived}", flush=True)
+        rows.append({"name": name, "us_per_call": round(float(us), 1),
+                     "derived": derived})
+        if not json_to_stdout:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if not json_to_stdout:
+        print("name,us_per_call,derived")
 
     for b in selected:
         mod = __import__(f"benchmarks.bench_{b}", fromlist=["run"])
@@ -37,6 +61,16 @@ def main() -> None:
            stats["entries_by_shards"])
     report("executor_cache/entries_by_shards", 0,
            executor_cache_stats()["entries_by_shards"])
+
+    if args.json_out:
+        payload = json.dumps({"rows": rows}, indent=2, default=str)
+        if json_to_stdout:
+            print(payload)
+        else:
+            with open(args.json_out, "w") as f:
+                f.write(payload)
+            print(f"# wrote {len(rows)} rows to {args.json_out}",
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

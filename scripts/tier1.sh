@@ -23,9 +23,13 @@ if [[ "$FAST" == 1 ]]; then
   # the overlap>=cached ordering, and refreshes BENCH_steady_state.json
   # (small sizes; seconds, not minutes)
   python benchmarks/bench_steady_state.py --fast
-  # vocab-sharded smoke on a forced 2-device CPU mesh: asserts sharded
-  # numerics == replicated and the per-device footprint halving, refreshes
-  # BENCH_sharded.json
-  XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python benchmarks/bench_sharded.py --fast
+  # vocab-sharded smoke (the bench respawns itself in a subprocess with a
+  # forced 2-device CPU mesh — no env leak into this shell): asserts
+  # sharded numerics == replicated and the per-device footprint halving,
+  # refreshes BENCH_sharded.json
+  python benchmarks/bench_sharded.py --fast
+  # locality-aware hot/cold sharding smoke (same respawn pattern): asserts
+  # outputs identical to the interleaved PR-3 path AND >= 2x less routed
+  # exchange volume on the Zipf stream, refreshes BENCH_locality.json
+  python benchmarks/bench_locality.py --fast
 fi

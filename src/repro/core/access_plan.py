@@ -1,0 +1,534 @@
+"""AccessPlan — the compiled host-side access artifact (DLC stage).
+
+Ember's thesis is that the *access side* of an embedding operation deserves
+its own compiled representation: the paper lowers lookups through dedicated
+IRs (SCF -> SLC -> SLCV -> DLC) so access-stream generation is optimized
+code, not ad-hoc host glue.  Before this module the program-scope access
+work had drifted back into glue: CSR merging + ``roff`` synthesis lived in
+``passes/fuse.py``, capacity bucketing was re-derived by the executor, and
+the shard-routing layout was a private implementation inside
+``core/shard_plan.py`` — three host paths each re-deriving the same stream
+layout.
+
+The ``plan-access`` pass (registered after ``lower-dlc`` in the
+PassManager pipeline) now emits ONE :class:`AccessPlan` per compiled unit,
+capturing as *data*:
+
+* the stacked-slot geometry (slot bases, per-segment ``roff`` table-offset
+  stream) of the fused unit;
+* the capacity-bucket lattice (:mod:`repro.core.capacity`) every ragged
+  extent is padded to;
+* the vocab-shard routing table — per-slot ownership divisors, local bases,
+  and the per-lookup owner/local-address computation of the offset-stream
+  exchange;
+* the **hot/cold row classification**: the Zipf head of each vocab slot
+  (scored by :func:`repro.data.locality.classify_hot` reuse counts) is
+  replicated on every shard as a *hot slab*, so hot lookups are local on
+  whichever shard is least loaded (round-robin) and pay **zero exchange**;
+  only the interleave-sharded cold tail routes indices across the mesh.
+
+All host marshaling — the executor's per-step packing, the shard planner's
+routed exchange, the one-shot ``fuse_inputs`` path — is *interpretation of
+one AccessPlan*; none of those layers derives layout on its own anymore.
+
+Sharded local-table layout (one fused unit, S shards)::
+
+    shard s = [ slot0 cold slice s | slot1 cold slice s | ...
+                | slot0 hot slab | slot1 hot slab | ... ]
+
+    cold slice s of slot t = rows with cold-rank in [s*C_t, (s+1)*C_t),
+    C_t = ceil(#cold_t / S); the hot slabs are identical on every shard.
+
+Every shard's local table has the same shape and the same local bases
+(SPMD), and the routed per-lookup indices are emitted *fully rebased* to
+the local layout (the access-unit ALU resolving the complete address), so
+the kernel-side ``seg_base`` stream degenerates to zeros on the sharded
+path.  With an empty hot classification the layout and routing reduce
+exactly to the PR-3 interleaved ceil-split (regression-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .capacity import DEFAULT_LATTICE, CapacityLattice
+from .ops import EmbeddingOp
+
+
+def canonical_hot(hot_rows) -> tuple:
+    """Hashable canonical form of a ``{op name: hot row ids}`` mapping —
+    the compile-cache / executor-cache key component."""
+    if not hot_rows:
+        return ()
+    return tuple(sorted(
+        (str(name), tuple(int(i) for i in sorted(set(ids))))
+        for name, ids in dict(hot_rows).items() if len(ids)))
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberPlan:
+    """One member op's slice of the fused access stream.  Whether a vals
+    stream is marshaled is a *unit*-level property (``AccessPlan.need_vals``
+    — a mixed group unit-weight-upcasts every member), so it is not
+    duplicated here."""
+
+    name: Optional[str]      # op name (None for a singleton unit)
+    kind: str                # sls | kg | gather | spmm | fusedmm
+    num_segments: int
+    seg_offset: int          # first fused output row of this member
+    slot: int                # stacked-slot index (shared tables share one)
+
+
+@dataclasses.dataclass
+class SlotPlan:
+    """One stacked table slot's layout: single-device base + shard split +
+    hot/cold classification.  ``remap``/``is_hot`` are only materialized on
+    sharded plans (they are the per-row address-translation tables of the
+    routed exchange)."""
+
+    rows: int                     # index-unit rows of the slot
+    base: int                     # single-device stacked base (index units)
+    hot_ids: np.ndarray           # sorted global unit-row ids, replicated
+    cold_ids: np.ndarray          # ascending ids of the interleaved tail
+    cap: int                      # per-shard cold capacity ceil(#cold / S)
+    cold_base: int                # local base of this slot's cold slice
+    hot_base: int                 # local base of this slot's hot slab
+    remap: Optional[np.ndarray]   # row -> cold rank | hot slab position
+    is_hot: Optional[np.ndarray]  # row -> replicated?
+
+    @property
+    def hot_rows(self) -> int:
+        return len(self.hot_ids)
+
+    @property
+    def cold_rows(self) -> int:
+        return len(self.cold_ids)
+
+
+@dataclasses.dataclass
+class AccessPlan:
+    """The per-unit access artifact: stream layout + routing as data.
+
+    Built once per compiled unit by the ``plan-access`` pass (part of the
+    compile-cache artifact) and interpreted by every host marshaling path.
+    All methods are pure; a plan may be shared by concurrent executors.
+    """
+
+    op: EmbeddingOp               # the unit's (fused) op
+    group: Optional[object]       # the FusedGroup (None for singletons)
+    kind: str                     # csr | gather (the fused loop class)
+    shards: int
+    blk: int                      # physical rows per index unit
+    num_segments: int
+    members: tuple                # of MemberPlan
+    slots: tuple                  # of SlotPlan
+    roff: np.ndarray              # per-segment single-device stacked base
+    lattice: CapacityLattice
+    need_vals: bool
+    unit_weight: float            # ⊗-identity for unit-weight upcast
+    hot_spec: tuple = ()          # canonical_hot() the plan was built with
+    _kg_ptrs: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------------
+    # Geometry
+    # ------------------------------------------------------------------
+
+    @property
+    def fused(self) -> bool:
+        return self.group is not None
+
+    @property
+    def local_rows(self) -> int:
+        """Index-unit rows of ONE shard's local table (cold slices + hot
+        slabs); equals the full stacked rows on a 1-shard plan."""
+        if self.shards == 1:
+            return sum(s.rows for s in self.slots)
+        return sum(s.cap for s in self.slots) + self.hot_rows_total
+
+    @property
+    def hot_rows_total(self) -> int:
+        return sum(s.hot_rows for s in self.slots)
+
+    @property
+    def hot_slab_bytes(self) -> int:
+        """Bytes of replicated hot rows each shard carries (0 when cold-only)."""
+        item = np.dtype(self.op.dtype).itemsize
+        return self.hot_rows_total * self.blk * self.op.emb_len * item
+
+    @property
+    def table_bytes_per_shard(self) -> int:
+        item = np.dtype(self.op.dtype).itemsize
+        return self.local_rows * self.blk * self.op.emb_len * item
+
+    @property
+    def slot_first_member(self) -> tuple:
+        """Per slot, the first member name bound to it — the executor reads
+        each slot's source table array through this member's inputs."""
+        first: dict = {}
+        for m in self.members:
+            first.setdefault(m.slot, m.name)
+        return tuple(first[t] for t in range(len(self.slots)))
+
+    def stats(self) -> dict:
+        return {"shards": self.shards, "slots": len(self.slots),
+                "members": len(self.members),
+                "hot_rows": self.hot_rows_total,
+                "hot_slab_bytes": self.hot_slab_bytes,
+                "local_rows": self.local_rows}
+
+    # ------------------------------------------------------------------
+    # Per-step stream interpretation (single-device path)
+    # ------------------------------------------------------------------
+
+    def member_ptrs(self, m: MemberPlan, ins: dict) -> np.ndarray:
+        """CSR offsets of one member; kg members get their static degenerate
+        one-per-segment CSR (cached — it never changes per signature)."""
+        if m.kind == "kg":
+            p = self._kg_ptrs.get(m.seg_offset)
+            if p is None:
+                p = self._kg_ptrs[m.seg_offset] = np.arange(
+                    m.num_segments + 1, dtype=np.int64)
+            return p
+        return np.asarray(ins["ptrs"], np.int64)
+
+    def csr_parts(self, inputs: dict) -> tuple:
+        """Per-member CSR shape of one step: ``(parts, nnz, max_seg)`` with
+        ``parts`` a list of ``(member, ptrs, member_nnz)`` — everything the
+        capacity bucketing and the packing need."""
+        parts: list = []
+        nnz = 0
+        max_seg = 0
+        for m in self.members:
+            p = self.member_ptrs(m, inputs[m.name])
+            n = int(p[-1])
+            max_seg = max(max_seg, int(np.diff(p).max(initial=0)))
+            parts.append((m, p, n))
+            nnz += n
+        return parts, nnz, max_seg
+
+    def pack_csr(self, buf: dict, parts: list, inputs: dict) -> int:
+        """Write the offset-merged fused CSR into ``buf`` (the executor's
+        bucketed scratch or a fresh exact-size dict): member ``ptrs`` run
+        rebased by the running nnz, ``idxs`` concatenated, unweighted
+        members of an upcast group emitting the constant ⊗-identity run."""
+        pos = 0
+        for m, p, n in parts:
+            buf["ptrs"][m.seg_offset:m.seg_offset + m.num_segments] = \
+                p[:-1] + pos
+            buf["idxs"][pos:pos + n] = inputs[m.name]["idxs"]
+            if "vals" in buf:
+                v = inputs[m.name].get("vals")
+                if v is None:             # unit-weight upcast member
+                    buf["vals"][pos:pos + n] = self.unit_weight
+                else:
+                    buf["vals"][pos:pos + n] = v
+            pos += n
+        buf["ptrs"][self.num_segments] = pos
+        return pos
+
+    def pack_gather(self, buf: dict, inputs: dict) -> None:
+        for m in self.members:
+            buf["idxs"][m.seg_offset:m.seg_offset + m.num_segments] = \
+                inputs[m.name]["idxs"]
+
+    def fused_index_inputs(self, inputs: dict) -> dict:
+        """The one-shot per-step marshaling (exact-size fresh arrays):
+        offset-merged ``ptrs``, concatenated ``idxs``/``vals`` and the
+        ``roff`` stream — everything except the stacked table."""
+        out: dict = {"roff": self.roff}
+        if self.kind == "gather":
+            out["idxs"] = np.concatenate(
+                [np.asarray(inputs[m.name]["idxs"]) for m in self.members])
+            return out
+        parts, nnz, _ = self.csr_parts(inputs)
+        buf = {"ptrs": np.zeros(self.num_segments + 1, np.int32),
+               "idxs": np.zeros(nnz, np.int32)}
+        if self.need_vals:
+            buf["vals"] = np.zeros(nnz, np.dtype(self.op.dtype))
+        self.pack_csr(buf, parts, inputs)
+        out.update(buf)
+        return out
+
+    # ------------------------------------------------------------------
+    # Table stacking (layout interpretation)
+    # ------------------------------------------------------------------
+
+    def phys_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Index-unit row ids -> physical table rows (gather blocks)."""
+        ids = np.asarray(ids, np.int64)
+        if self.blk == 1:
+            return ids
+        return (ids[:, None] * self.blk +
+                np.arange(self.blk, dtype=np.int64)[None, :]).reshape(-1)
+
+    def stack_np(self, parts: list) -> np.ndarray:
+        """Numpy oracle of the stacked table this plan lays out: the
+        single-device row-stack on 1 shard, or the ``(S*L*blk, E)`` global
+        array whose row block ``s`` is shard ``s``'s local table (cold
+        slices + replicated hot slabs)."""
+        emb = parts[0].shape[1]
+        dt = parts[0].dtype
+        if self.shards == 1:
+            out = np.empty((self.local_rows * self.blk, emb), dt)
+            for slot, p in zip(self.slots, parts):
+                p = np.asarray(p)
+                assert p.shape[0] == slot.rows * self.blk, \
+                    (p.shape, slot.rows, self.blk)
+                out[slot.base * self.blk:
+                    slot.base * self.blk + p.shape[0]] = p
+            return out
+        s, blk, L = self.shards, self.blk, self.local_rows
+        out = np.zeros((s * L * blk, emb), dt)
+        for slot, p in zip(self.slots, parts):
+            p = np.asarray(p)
+            cold = p[self.phys_rows(slot.cold_ids)]
+            hot = p[self.phys_rows(slot.hot_ids)]
+            for sh in range(s):
+                lo = sh * slot.cap
+                hi = min((sh + 1) * slot.cap, slot.cold_rows)
+                if lo < hi:
+                    dst = (sh * L + slot.cold_base) * blk
+                    out[dst:dst + (hi - lo) * blk] = \
+                        cold[lo * blk:hi * blk]
+                if slot.hot_rows:
+                    dst = (sh * L + slot.hot_base) * blk
+                    out[dst:dst + slot.hot_rows * blk] = hot
+        return out
+
+    # ------------------------------------------------------------------
+    # Sharded routing (the offset-stream exchange, step 1)
+    # ------------------------------------------------------------------
+
+    def _resolve(self, idxs: np.ndarray, slot: SlotPlan, rr: int) -> tuple:
+        """Per-lookup (owner shard, fully-rebased local index, #hot) of one
+        member's index stream.  Hot rows are local everywhere, so their
+        owner is a load-balancing choice — round-robin in stream order
+        (``rr`` threads the counter across members) — and they contribute
+        no exchange; cold rows route to ``cold_rank // C_t``."""
+        idxs = np.asarray(idxs, np.int64)
+        if slot.remap is None or not slot.hot_rows:
+            owner = idxs // slot.cap
+            return owner, slot.cold_base + idxs - owner * slot.cap, 0, rr
+        r = slot.remap[idxs].astype(np.int64)
+        hot = slot.is_hot[idxs]
+        nh = int(hot.sum())
+        owner = np.empty(len(idxs), np.int64)
+        cold = ~hot
+        owner[cold] = r[cold] // slot.cap
+        owner[hot] = (rr + np.arange(nh, dtype=np.int64)) % self.shards
+        local = np.where(hot, slot.hot_base + r,
+                         slot.cold_base + r - owner * slot.cap)
+        return owner, local, nh, rr + nh
+
+    def route_csr(self, inputs: dict) -> dict:
+        """Bucket one step's fused CSR stream by owning shard: merge the
+        member streams, resolve every lookup's (owner, local address),
+        stable-sort by owner (the source stream is segment-ordered, so each
+        shard's re-emitted CSR is already valid) and pad to the joint
+        exchange capacity bucket.  ``cold_nnz`` is the routed (exchanged)
+        volume; ``hot_nnz`` lookups were absorbed by the replicated slab."""
+        s = self.shards
+        parts, nnz, _ = self.csr_parts(inputs)
+        segs, owners, locals_, vals = [], [], [], []
+        hot_nnz, rr = 0, 0
+        for m, p, n in parts:
+            ins = inputs[m.name]
+            segs.append(np.repeat(
+                np.arange(m.num_segments, dtype=np.int64) + m.seg_offset,
+                np.diff(p)))
+            owner, local, nh, rr = self._resolve(
+                ins["idxs"], self.slots[m.slot], rr)
+            owners.append(owner)
+            locals_.append(local)
+            hot_nnz += nh
+            if self.need_vals:
+                v = ins.get("vals")
+                vals.append(np.full(n, self.unit_weight,
+                                    np.dtype(self.op.dtype))
+                            if v is None else np.asarray(v))
+        seg = np.concatenate(segs) if segs else np.zeros(0, np.int64)
+        owner = np.concatenate(owners) if owners else np.zeros(0, np.int64)
+        local = np.concatenate(locals_) if locals_ else np.zeros(0, np.int64)
+        counts = np.zeros((s, self.num_segments), np.int64)
+        if len(seg):
+            np.add.at(counts, (owner, seg), 1)
+        per_nnz = counts.sum(axis=1)
+        ptrs = np.zeros((s, self.num_segments + 1), np.int32)
+        np.cumsum(counts, axis=1, out=ptrs[:, 1:])
+        perm = np.argsort(owner, kind="stable")
+        bounds = np.zeros(s + 1, np.int64)
+        np.cumsum(per_nnz, out=bounds[1:])
+        cap, ml = self.lattice.exchange_capacity(
+            per_nnz, counts.max(axis=1, initial=0))
+        return {
+            "ptrs": ptrs,
+            "nnz": per_nnz,
+            "idxs": local[perm].astype(np.int32),
+            "vals": (np.concatenate(vals)[perm]
+                     if self.need_vals else None),
+            "bounds": bounds,
+            "cap": cap,
+            "max_lookups": ml,
+            "hot_nnz": hot_nnz,
+            "cold_nnz": nnz - hot_nnz,
+        }
+
+    def route_gather(self, inputs: dict) -> dict:
+        """Bucket a fused gather's one-index-per-segment stream: every shard
+        gets the full (B,) local-index vector with non-owned slots masked
+        out (a gather's 'pool' is the row itself, so the mask IS the partial
+        pool).  Hot segments are served round-robin — no exchange."""
+        s, B = self.shards, self.num_segments
+        idxs_out = np.zeros((s, B), np.int32)
+        mask = np.zeros((s, B), np.float32)
+        shard_ids = np.arange(s)[:, None]
+        hot_segments, rr = 0, 0
+        for m in self.members:
+            owner, local, nh, rr = self._resolve(
+                inputs[m.name]["idxs"], self.slots[m.slot], rr)
+            hot_segments += nh
+            sl = slice(m.seg_offset, m.seg_offset + m.num_segments)
+            owned = owner[None, :] == shard_ids
+            idxs_out[:, sl] = np.where(owned, local[None, :], 0)
+            mask[:, sl] = owned
+        return {"idxs": idxs_out, "mask": mask,
+                "hot_segments": hot_segments,
+                "cold_segments": B - hot_segments}
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def _build_slots(rows_per_slot: list, bases: list, shards: int,
+                 hot_per_slot: list) -> tuple:
+    """Lay out the slots: single-device bases are given; the sharded layout
+    packs cold slices first (cumulative ceil-split caps), then the
+    replicated hot slabs."""
+    hots = [np.asarray(sorted(set(int(i) for i in h if 0 <= int(i) < r)),
+                       np.int64)
+            for r, h in zip(rows_per_slot, hot_per_slot)]
+    caps = [max(1, -(-(r - len(h)) // shards))
+            for r, h in zip(rows_per_slot, hots)]
+    total_cold = sum(caps)
+    slots: list = []
+    cold_base = 0
+    hot_base = total_cold
+    for rows, base, hot, cap in zip(rows_per_slot, bases, hots, caps):
+        cold = np.setdiff1d(np.arange(rows, dtype=np.int64), hot)
+        remap = is_hot = None
+        if shards > 1:
+            remap = np.zeros(rows, np.int32)
+            is_hot = np.zeros(rows, bool)
+            remap[cold] = np.arange(len(cold), dtype=np.int32)
+            if len(hot):
+                remap[hot] = np.arange(len(hot), dtype=np.int32)
+                is_hot[hot] = True
+        slots.append(SlotPlan(rows=rows, base=base, hot_ids=hot,
+                              cold_ids=cold, cap=cap, cold_base=cold_base,
+                              hot_base=hot_base, remap=remap,
+                              is_hot=is_hot))
+        cold_base += cap
+        hot_base += len(hot)
+    return tuple(slots)
+
+
+def build_plan(op: EmbeddingOp, group=None, shards: int = 1,
+               hot_rows=None, lattice: CapacityLattice = DEFAULT_LATTICE
+               ) -> AccessPlan:
+    """Build the AccessPlan of one compiled unit.
+
+    ``group`` is the fusion pass's FusedGroup (duck-typed: ``members``,
+    ``member_ops``, ``row_offsets``, ``seg_offsets``, ``op``,
+    ``unit_weight``); ``None`` builds the trivial singleton plan.
+    ``hot_rows`` maps member op names to replicated row ids — only
+    meaningful on sharded plans (a 1-shard plan has no exchange to save,
+    so the classification is dropped and the layout is exactly the
+    single-device stack)."""
+    shards = max(int(shards), 1)
+    hot_rows = dict(hot_rows) if (hot_rows and shards > 1) else {}
+    if group is None:
+        member = MemberPlan(None, op.kind, op.num_segments, 0, 0)
+        slots = _build_slots([op.num_embeddings], [0], shards, [()])
+        return AccessPlan(
+            op=op, group=None,
+            kind="gather" if op.kind == "gather" else "csr",
+            shards=shards, blk=op.block_rows if op.kind == "gather" else 1,
+            num_segments=op.num_segments, members=(member,), slots=slots,
+            roff=np.zeros(op.num_segments, np.int32), lattice=lattice,
+            # kg included: a standalone kg op always consumes a vals stream
+            # (fused groups instead fold kg into op.weighted via the upcast)
+            need_vals=op.weighted or op.kind in ("spmm", "kg"),
+            unit_weight=1.0 if op.semiring.mul == "mul" else 0.0)
+
+    fop = group.op
+    blk = fop.block_rows if fop.kind == "gather" else 1
+    slot_of_base: dict = {}
+    rows_per_slot: list = []
+    bases: list = []
+    members: list = []
+    hot_per_slot: list = []
+    for name, mop, base, seg_off in zip(group.members, group.member_ops,
+                                        group.row_offsets,
+                                        group.seg_offsets):
+        if base not in slot_of_base:
+            slot_of_base[base] = len(rows_per_slot)
+            rows_per_slot.append(mop.num_embeddings)
+            bases.append(base)
+            hot_per_slot.append(set())
+        t = slot_of_base[base]
+        hot_per_slot[t].update(hot_rows.get(name, ()))
+        members.append(MemberPlan(name, mop.kind, mop.num_segments,
+                                  seg_off, t))
+    slots = _build_slots(rows_per_slot, bases, shards,
+                         [sorted(h) for h in hot_per_slot])
+    roff = np.concatenate(
+        [np.full(m.num_segments, slots[m.slot].base, np.int32)
+         for m in members])
+    return AccessPlan(
+        op=fop, group=group,
+        kind="gather" if fop.kind == "gather" else "csr",
+        shards=shards, blk=blk, num_segments=fop.num_segments,
+        members=tuple(members), slots=slots, roff=roff, lattice=lattice,
+        need_vals=fop.weighted or fop.kind == "spmm",
+        unit_weight=group.unit_weight,
+        hot_spec=canonical_hot(hot_rows))
+
+
+def plan_for_group(group, shards: int = 1, hot_rows=None) -> AccessPlan:
+    """Convenience: the AccessPlan of a FusedGroup outside the pass
+    pipeline (the one-shot ``fuse_inputs`` path and tests)."""
+    return build_plan(group.op, group, shards=shards, hot_rows=hot_rows)
+
+
+def plan_access_pass(dlc, frontend_op=None, group=None, shards: int = 1,
+                     hot_rows=None, **_) -> AccessPlan:
+    """The ``plan-access`` PassManager pass: consumes the DLC program (the
+    plan is the host-side companion of the device DLC artifact) and emits
+    the unit's AccessPlan from the compile options the driver forwards."""
+    assert frontend_op is not None, "plan-access needs the frontend op"
+    return build_plan(frontend_op, group, shards=shards, hot_rows=hot_rows)
+
+
+def hot_rows_from_traces(program, traces: dict, budget) -> dict:
+    """Classify each op's Zipf head from calibration index traces, sized to
+    ``budget.hot_slab_bytes`` per table (0 disables).  Returns the
+    ``{op name: tuple(row ids)}`` mapping ``executor_for`` /
+    ``compile_program`` accept as ``hot_rows``."""
+    from ..data.locality import classify_hot
+    out: dict = {}
+    if getattr(budget, "hot_slab_bytes", 0) <= 0:
+        return out
+    for name, op in program.ops:
+        tr = traces.get(name)
+        if tr is None or len(tr) == 0:
+            continue
+        blk = op.block_rows if op.kind == "gather" else 1
+        row_bytes = blk * op.emb_len * np.dtype(op.dtype).itemsize
+        max_hot = budget.hot_slab_bytes // max(row_bytes, 1)
+        ids = classify_hot(np.asarray(tr), op.num_embeddings, max_hot)
+        if len(ids):
+            out[name] = tuple(int(i) for i in ids)
+    return out

@@ -197,6 +197,13 @@ class FusionBudget:
     #: the stacked-table footprint) by S, so the partitioner splits far
     #: fewer groups.  Part of the compile-cache key via this dataclass.
     shards: int = 1
+    #: per-table byte budget for the replicated hot slab of locality-aware
+    #: hot/cold sharding (see :mod:`repro.core.access_plan`): the classified
+    #: Zipf head of each vocab may replicate up to this many bytes per shard
+    #: — lookups it absorbs pay zero exchange.  0 disables classification
+    #: (:func:`~repro.core.access_plan.hot_rows_from_traces` sizes heads
+    #: against it).  Part of the compile-cache key via this dataclass.
+    hot_slab_bytes: int = 0
 
 
 def lane_tile(emb_len: int, vlen: int) -> int:
@@ -275,34 +282,51 @@ def table_bytes(op: EmbeddingOp, shards: int = 1) -> int:
     return rows * blk * op.emb_len * np.dtype(op.dtype).itemsize
 
 
-def exchange_bytes(ops, shards: int = 1) -> dict:
+def exchange_bytes(ops, shards: int = 1,
+                   hot_traffic_fraction: float = 0.0) -> dict:
     """Per-step exchange-volume estimate of running ``ops`` as one fused
     unit vocab-sharded over ``shards``: indices out (each lookup's index —
     and its vals word in an upcast group — lands on its owning shard;
     (S-1)/S of them are remote) and pooled rows back (the psum/pmax ring of
-    the (B, E) partial pools: each shard ships its partials S-1 hops)."""
+    the (B, E) partial pools: each shard ships its partials S-1 hops).
+
+    ``hot_traffic_fraction`` is the share of lookups the replicated hot
+    slab absorbs (hot rows are local on every shard — zero index exchange);
+    ``index_savings_bytes`` reports what the classification saved vs. the
+    all-interleaved layout."""
     ops = list(ops)
     if shards <= 1:
-        return {"index_bytes": 0, "row_bytes": 0, "total_bytes": 0}
+        return {"index_bytes": 0, "row_bytes": 0, "total_bytes": 0,
+                "index_savings_bytes": 0}
+    h = min(max(float(hot_traffic_fraction), 0.0), 1.0)
     lookups = sum(expected_lookups(op) for op in ops)
     words = 2 if group_needs_vals(ops) else 1
-    idx = int(lookups * words * 4 * (shards - 1) / shards)
+    idx_all = int(lookups * words * 4 * (shards - 1) / shards)
+    idx = int(idx_all * (1.0 - h))
     rows = sum(op.num_segments * op.emb_len for op in ops) * 4 * (shards - 1)
     return {"index_bytes": idx, "row_bytes": rows,
-            "total_bytes": idx + rows}
+            "total_bytes": idx + rows,
+            "index_savings_bytes": idx_all - idx}
 
 
 def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
                          num_buffers: int = 2,
-                         m: Machine = DEFAULT, shards: int = 1) -> dict:
+                         m: Machine = DEFAULT, shards: int = 1,
+                         hot_rows_total: int = 0,
+                         hot_traffic_fraction: float = 0.0) -> dict:
     """Resource estimate of compiling ``ops`` as ONE batched KernelPlan.
 
     Returns vmem_bytes (tiles + scalar operands — PER SHARD when
     ``shards`` > 1, which is what the partitioner budgets), the split of
-    that total, the stacked-table footprint (total and per shard), the
-    per-step exchange volume of the sharded path, total access/execute
-    cycles of the batched stream, and their skew (``queue_balance`` ≥ 1;
-    1.0 = perfectly balanced DAE queues).
+    that total, the stacked-table footprint (total and per shard — the
+    per-shard figure includes the replicated hot slab of
+    ``hot_rows_total`` classified rows — an int COUNT, not the
+    ``{name: ids}`` mapping the compile entry points take), the per-step
+    exchange volume of the sharded path
+    with the savings the hot slab buys (``hot_traffic_fraction`` of the
+    index stream stays local), total access/execute cycles of the batched
+    stream, and their skew (``queue_balance`` ≥ 1; 1.0 = perfectly
+    balanced DAE queues).
     """
     ops = list(ops)
     assert ops, "empty fusion candidate"
@@ -313,13 +337,23 @@ def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
     acc = sum(access_weight(op, lvl, m) for op in ops)
     exe = sum(execute_weight(op, lvl, m) for op in ops)
     hi, lo = max(acc, exe), min(acc, exe)
+    # the replicated hot slab every shard carries (0 rows when disabled);
+    # compatibility already guarantees a homogeneous (emb_len, blk, dtype)
+    op0 = ops[0]
+    blk = op0.block_rows if op0.kind == "gather" else 1
+    hot_slab = (int(hot_rows_total) * blk * op0.emb_len
+                * np.dtype(op0.dtype).itemsize if shards > 1 else 0)
+    exch = exchange_bytes(ops, shards, hot_traffic_fraction)
     return {
         "vmem_bytes": tiles + operands,
         "tile_bytes": tiles,
         "operand_bytes": operands,
         "table_bytes": sum(table_bytes(op) for op in ops),
-        "table_bytes_per_shard": sum(table_bytes(op, shards) for op in ops),
-        "exchange_bytes": exchange_bytes(ops, shards)["total_bytes"],
+        "table_bytes_per_shard":
+            sum(table_bytes(op, shards) for op in ops) + hot_slab,
+        "hot_slab_bytes": hot_slab,
+        "exchange_bytes": exch["total_bytes"],
+        "exchange_savings_bytes": exch["index_savings_bytes"],
         "shards": shards,
         "access_cycles": acc,
         "execute_cycles": exe,

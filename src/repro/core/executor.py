@@ -18,9 +18,10 @@ Three mechanisms, mirroring the DAE queue at program scope:
   ``roff`` table-offset streams, and per-batch-shape scratch buffers for the
   CSR operands.  A steady-state step does **zero host table stacking**.
 * **Capacity buckets** — ``idxs``/``vals`` nnz and the ``max_lookups`` grid
-  extent are padded to power-of-two buckets
-  (:func:`repro.kernels.sls.lookup_capacity`), so a ragged batch sequence
-  reuses one kernel trace per bucket instead of re-specializing every step.
+  extent are padded to the capacity-bucket lattice carried by each unit's
+  compiled :class:`~repro.core.access_plan.AccessPlan`
+  (:mod:`repro.core.capacity`), so a ragged batch sequence reuses one
+  kernel trace per bucket instead of re-specializing every step.
 * **Cross-step access/execute overlap** — :meth:`ProgramExecutor.submit`
   marshals step N+1's access-side operands (host index packing + device
   transfer, dispatched asynchronously) while step N's execute phase is still
@@ -34,14 +35,17 @@ alongside the compile cache, which is what the runtimes
 (:mod:`repro.runtime.server`, :mod:`repro.runtime.trainer`) hold on to.
 
 **Sharded programs** — pass ``mesh`` (and optionally ``shard_axis``) and the
-fused units' stacked tables are vocab-partitioned over that mesh axis
-(:mod:`repro.core.shard_plan`): each device holds a 1/S slice of every
-stacked slot, the per-step CSR streams are routed to their owning shards by
-the host (the access unit doing the offset-stream exchange, padded to the
-same pow-2/quarter-octave capacity buckets so the exchange is retrace-free),
-and the batched SLS kernel runs under ``shard_map`` with ``seg_base``
-rebased per shard; pooled partial rows combine with ``psum``/``pmax``.
-A mesh of size 1 (or ``mesh=None``) takes exactly the single-device path.
+fused units' stacked tables are vocab-partitioned over that mesh axis per
+each unit's compiled :class:`~repro.core.access_plan.AccessPlan`: each
+device holds a 1/S slice of every slot's cold tail plus the replicated hot
+slab (the classified Zipf head — pass ``hot_rows`` to enable), the per-step
+CSR streams are routed to their owning shards by the host interpreting the
+plan (the access unit doing the offset-stream exchange, padded to the same
+pow-2/quarter-octave capacity buckets so the exchange is retrace-free; hot
+lookups stay local and pay no exchange), and the batched SLS kernel runs
+under ``shard_map`` (:mod:`repro.core.shard_plan` owns the device bodies);
+pooled partial rows combine with ``psum``/``pmax``.  A mesh of size 1 (or
+``mesh=None``) takes exactly the single-device path.
 """
 from __future__ import annotations
 
@@ -56,12 +60,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from . import access_plan as ap
 from . import backend_jax as bj
 from . import backend_pallas as bp
+from . import cost_model
 from . import shard_plan as sp
 from .cost_model import FusionBudget
 from .ops import EmbeddingProgram
-from .passes.fuse import FusedGroup, group_roff
+from .passes.fuse import FusedGroup
 from .pipeline import (BoundedLru, ProgramCompileResult, compile_program,
                        entries_by_shards)
 
@@ -83,15 +89,16 @@ class StepHandle:
 
 @dataclasses.dataclass
 class _UnitState:
-    """Device-resident state of one compiled unit (the marshaling cache)."""
+    """Device-resident state of one compiled unit (the marshaling cache).
+
+    ``plan`` is the unit's compiled :class:`~repro.core.access_plan.AccessPlan`
+    — ALL host marshaling of this unit (stream merge, capacity buckets,
+    shard routing, hot/cold addressing) is interpretation of it."""
 
     unit: object                  # CompiledUnit
+    plan: Optional[ap.AccessPlan] = None
     table: Optional[jax.Array] = None
     roff: Optional[jax.Array] = None       # fused units only (device)
-    roff_np: Optional[np.ndarray] = None   # fused units only (host mirror)
-    layout: Optional[sp.ShardLayout] = None  # sharded executors only
-    seg_caps: Optional[np.ndarray] = None    # sharded gather: owner divisors
-    kg_ptrs: dict = dataclasses.field(default_factory=dict)
     # weakrefs to the bound source table arrays: identity comparison that
     # cannot be fooled by CPython id reuse (a collected source reads as
     # "changed" and triggers a rebind) and does not pin caller memory
@@ -148,7 +155,7 @@ class ProgramExecutor:
     def __init__(self, compiled: ProgramCompileResult,
                  interpret: Optional[bool] = None, depth: int = 2,
                  backend: str = "pallas", mesh=None,
-                 shard_axis: str = "model"):
+                 shard_axis: str = "model", hot_rows=None):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
         self.compiled = compiled
@@ -160,8 +167,15 @@ class ProgramExecutor:
         # a 1-wide mesh IS the single-device executor (bit-identical path)
         self.mesh = mesh if self.shards > 1 else None
         self.shard_axis = shard_axis
+        # hot/cold vocab classification ({op name: replicated row ids});
+        # only meaningful on sharded executors — see core/access_plan.py
+        self.hot_rows = dict(hot_rows) if (hot_rows and self.shards > 1) \
+            else {}
+        self._hot_spec = ap.canonical_hot(self.hot_rows)
         self._shard_fns: dict = {}        # (unit_idx, bucket) -> jitted call
         self._units = [_UnitState(u) for u in compiled.units]
+        for u in self._units:
+            u.plan = self._plan_for(u)
         self._scratch: dict = {}          # (unit_idx, bucket) -> slot entry
         self._slots_packed: list = []     # slots the current dispatch used
         self._inflight: deque = deque()
@@ -169,7 +183,24 @@ class ProgramExecutor:
         self.stats = {"steps": 0, "table_stacks": 0, "table_restacks": 0,
                       "table_rebinds": 0, "marshal_hits": 0,
                       "marshal_misses": 0, "max_inflight": 0,
-                      "exchange_index_bytes": 0, "exchange_row_bytes": 0}
+                      "exchange_index_bytes": 0, "exchange_row_bytes": 0,
+                      "hot_lookups": 0, "cold_lookups": 0}
+
+    def _plan_for(self, u: _UnitState) -> ap.AccessPlan:
+        """The unit's AccessPlan: the compiled artifact when it matches this
+        executor's shard count + hot classification, else respecialized
+        (a caller that compiled without shard info — direct
+        ``ProgramExecutor(compile_program(...), mesh=...)`` construction —
+        still interprets exactly one plan)."""
+        plan = u.unit.result.access_plan
+        shards = self.shards if u.group is not None else 1
+        hot = self.hot_rows if u.group is not None else None
+        hot_spec = self._hot_spec if u.group is not None else ()
+        if plan is None or plan.shards != shards or \
+                plan.hot_spec != hot_spec:
+            plan = ap.build_plan(u.res.op, u.group, shards=shards,
+                                 hot_rows=hot)
+        return plan
 
     @property
     def signature(self) -> tuple:
@@ -184,30 +215,26 @@ class ProgramExecutor:
         return "x" if u.res.op.kind == "fusedmm" else "table"
 
     def _src_tables(self, u: _UnitState, inputs: dict) -> list:
-        """The unit's source table arrays, one per stacked slot."""
+        """The unit's source table arrays, one per stacked slot (the plan's
+        slot order — shared slots read once)."""
         if u.group is None:
             return [inputs[u.unit.names[0]][self._table_key(u)]]
-        g = u.group
-        parts, placed = [], set()
-        for name, base in zip(g.members, g.row_offsets):
-            if base not in placed:        # shared slots are stacked once
-                placed.add(base)
-                parts.append(inputs[name]["table"])
-        return parts
+        return [inputs[name]["table"]
+                for name in u.plan.slot_first_member]
 
     def _bind_unit(self, u: _UnitState, inputs: dict) -> None:
         srcs = self._src_tables(u, inputs)
         u.src_refs = tuple(weakref.ref(a) for a in srcs)
         if u.group is not None and self.shards > 1:
             # vocab-sharded stacked table: every device materializes only
-            # its own 1/S slice of each stacked slot (shard_plan layout)
-            if u.layout is None:
-                u.layout = sp.build_layout(u.group, self.shards)
-                u.roff_np = sp.local_roff(u.group, u.layout)
-                u.roff = sp.put_replicated(u.roff_np, self.mesh)
-                u.seg_caps = sp.segment_caps(u.group, u.layout)
+            # its own 1/S slice of each cold slice + the replicated hot
+            # slabs (the AccessPlan layout).  Routed indices arrive fully
+            # rebased, so the kernel's seg_base stream is all-zero.
+            if u.roff is None:
+                u.roff = sp.put_replicated(
+                    np.zeros(u.plan.num_segments, np.int32), self.mesh)
             u.table = sp.shard_stack_tables(
-                [jnp.asarray(a) for a in srcs], u.layout, self.mesh,
+                [jnp.asarray(a) for a in srcs], u.plan, self.mesh,
                 self.shard_axis)
             u.owns_table = True
             return
@@ -222,8 +249,7 @@ class ProgramExecutor:
             u.table = (parts[0] if len(parts) == 1
                        else jnp.concatenate(parts, axis=0))
             if u.roff is None:
-                u.roff_np = group_roff(u.group)
-                u.roff = jnp.asarray(u.roff_np)
+                u.roff = jnp.asarray(u.plan.roff)
 
     def bind_tables(self, inputs: dict) -> None:
         """Build the device-resident stacked tables (once per signature)."""
@@ -266,7 +292,7 @@ class ProgramExecutor:
             u.src_refs = tuple(weakref.ref(a) for a in srcs)
             if u.group is not None and self.shards > 1:
                 u.table = sp.shard_stack_tables(
-                    [jnp.asarray(a) for a in srcs], u.layout, self.mesh,
+                    [jnp.asarray(a) for a in srcs], u.plan, self.mesh,
                     self.shard_axis)
                 self.stats["table_restacks"] += 1
             elif u.group is not None and u.owns_table:
@@ -317,52 +343,26 @@ class ProgramExecutor:
         return entry["slots"][turn]
 
     def _marshal_csr(self, idx: int, u: _UnitState, inputs: dict):
-        """Fused CSR unit: pack the offset-merged ptrs + concatenated
-        idxs/vals into bucketed scratch; returns (exec inputs, max_lookups).
+        """Fused CSR unit: interpret the AccessPlan — per-member CSR shapes,
+        capacity buckets and the offset-merged pack all come from the plan;
+        this method only manages the rotating scratch and device transfer.
         The pallas backend gets device-put capacity buffers; the jax backend
         gets exact-length host views (its reference kernels derive segment
         ids from ``ptrs`` on the host anyway)."""
-        g = u.group
-        op = g.op
-        nnz = 0
-        max_seg = 0
-        members = []
-        for name, mop, seg_off in zip(g.members, g.member_ops, g.seg_offsets):
-            ins = inputs[name]
-            if mop.kind == "kg":
-                p = u.kg_ptrs.get(name)
-                if p is None:
-                    p = u.kg_ptrs[name] = np.arange(
-                        mop.num_segments + 1, dtype=np.int64)
-            else:
-                p = np.asarray(ins["ptrs"], np.int64)
-            m_nnz = int(p[-1])
-            max_seg = max(max_seg, int(np.diff(p).max(initial=0)))
-            members.append((name, mop, seg_off, p, m_nnz))
-            nnz += m_nnz
-        cap = kops.lookup_capacity(nnz)
-        ml = kops.grid_capacity(max_seg)
-        need_vals = op.weighted or op.kind == "spmm"
+        plan = u.plan
+        op = plan.op
+        parts, nnz, max_seg = plan.csr_parts(inputs)
+        cap = plan.lattice.lookup_capacity(nnz)
+        ml = plan.lattice.grid_capacity(max_seg)
+        need_vals = plan.need_vals
         spec = {"ptrs": ((op.num_segments + 1,), np.int32),
                 "idxs": ((cap,), np.int32)}
         if need_vals:
             spec["vals"] = ((cap,), np.dtype(op.dtype))
         buf = self._scratch_for(idx, (cap, ml), spec)
-        unit_w = g.unit_weight
-        pos = 0
-        for name, mop, seg_off, p, m_nnz in members:
-            buf["ptrs"][seg_off:seg_off + mop.num_segments] = p[:-1] + pos
-            buf["idxs"][pos:pos + m_nnz] = inputs[name]["idxs"]
-            if need_vals:
-                v = inputs[name].get("vals")
-                if v is None:             # unit-weight upcast member
-                    buf["vals"][pos:pos + m_nnz] = unit_w
-                else:
-                    buf["vals"][pos:pos + m_nnz] = v
-            pos += m_nnz
-        buf["ptrs"][op.num_segments] = nnz
+        plan.pack_csr(buf, parts, inputs)
         if self.backend == "jax":
-            ins = {"table": u.table, "roff": u.roff_np,
+            ins = {"table": u.table, "roff": plan.roff,
                    "ptrs": buf["ptrs"], "idxs": buf["idxs"][:nnz]}
             if need_vals:
                 ins["vals"] = buf["vals"][:nnz]
@@ -376,14 +376,12 @@ class ProgramExecutor:
         return dev, ml
 
     def _marshal_gather(self, idx: int, u: _UnitState, inputs: dict):
-        g = u.group
-        n = g.op.num_segments
+        plan = u.plan
+        n = plan.num_segments
         buf = self._scratch_for(idx, (), {"idxs": ((n,), np.int32)})
-        for name, mop, seg_off in zip(g.members, g.member_ops, g.seg_offsets):
-            buf["idxs"][seg_off:seg_off + mop.num_segments] = \
-                inputs[name]["idxs"]
+        plan.pack_gather(buf, inputs)
         if self.backend == "jax":
-            return {"table": u.table, "roff": u.roff_np,
+            return {"table": u.table, "roff": plan.roff,
                     "idxs": buf["idxs"]}, None
         return {"table": u.table, "roff": u.roff,
                 "idxs": jax.device_put(buf["idxs"])}, None
@@ -422,39 +420,15 @@ class ProgramExecutor:
         return fn
 
     def _run_csr_sharded(self, idx: int, u: _UnitState, inputs: dict):
-        """Fused CSR unit over S vocab shards: merge the member streams,
-        route every index to its owning shard (indices out), run the batched
-        kernel per shard under shard_map, combine the partial pools (pooled
-        rows back)."""
-        g = u.group
-        op = g.op
-        need_vals = op.weighted or op.kind == "spmm"
-        segs, gidxs, caps, gvals = [], [], [], []
-        for i, (name, mop, seg_off) in enumerate(
-                zip(g.members, g.member_ops, g.seg_offsets)):
-            ins = inputs[name]
-            if mop.kind == "kg":
-                p = u.kg_ptrs.get(name)
-                if p is None:
-                    p = u.kg_ptrs[name] = np.arange(
-                        mop.num_segments + 1, dtype=np.int64)
-            else:
-                p = np.asarray(ins["ptrs"], np.int64)
-            m_nnz = int(p[-1])
-            segs.append(np.repeat(
-                np.arange(mop.num_segments, dtype=np.int64) + seg_off,
-                np.diff(p)))
-            gidxs.append(np.asarray(ins["idxs"], np.int64))
-            caps.append(np.full(m_nnz, u.layout.member_cap(i), np.int64))
-            if need_vals:
-                v = ins.get("vals")
-                gvals.append(np.full(m_nnz, g.unit_weight,
-                                     np.dtype(op.dtype))
-                             if v is None else np.asarray(v))
-        routed = sp.route_csr(
-            u.layout, op.num_segments, np.concatenate(segs),
-            np.concatenate(gidxs), np.concatenate(caps),
-            np.concatenate(gvals) if need_vals else None)
+        """Fused CSR unit over S vocab shards: the AccessPlan merges the
+        member streams and routes every lookup to its owning shard (indices
+        out — hot rows resolve to the replicated slab and pay no exchange),
+        then the batched kernel runs per shard under shard_map and the
+        partial pools combine (pooled rows back)."""
+        plan = u.plan
+        op = plan.op
+        need_vals = plan.need_vals
+        routed = plan.route_csr(inputs)
         s, cap, ml = self.shards, routed["cap"], routed["max_lookups"]
         spec = {"ptrs": ((s, op.num_segments + 1), np.int32),
                 "idxs": ((s, cap), np.int32)}
@@ -470,8 +444,12 @@ class ProgramExecutor:
             if need_vals:
                 buf["vals"][o, :n] = routed["vals"][bounds[o]:bounds[o + 1]]
                 buf["vals"][o, n:] = 0
-        nnz = int(bounds[-1])
-        self.stats["exchange_index_bytes"] += nnz * (8 if need_vals else 4)
+        # only the cold tail is exchanged; hot lookups were absorbed by the
+        # replicated slab (local lookup on a round-robin shard)
+        self.stats["exchange_index_bytes"] += \
+            routed["cold_nnz"] * (8 if need_vals else 4)
+        self.stats["hot_lookups"] += routed["hot_nnz"]
+        self.stats["cold_lookups"] += routed["cold_nnz"]
         self.stats["exchange_row_bytes"] += \
             op.num_segments * op.emb_len * 4 * (s - 1)
         args = [u.table, u.roff,
@@ -484,21 +462,20 @@ class ProgramExecutor:
         return fn(*args)
 
     def _run_gather_sharded(self, idx: int, u: _UnitState, inputs: dict):
-        g = u.group
-        n = g.op.num_segments
-        blk = g.op.block_rows
-        gidx = np.empty(n, np.int64)
-        for name, mop, seg_off in zip(g.members, g.member_ops,
-                                      g.seg_offsets):
-            gidx[seg_off:seg_off + mop.num_segments] = inputs[name]["idxs"]
-        routed = sp.route_gather(u.layout, u.seg_caps, gidx)
+        plan = u.plan
+        n = plan.num_segments
+        blk = plan.op.block_rows
+        routed = plan.route_gather(inputs)
         s = self.shards
         spec = {"idxs": ((s, n), np.int32), "mask": ((s, n), np.float32)}
         buf = self._scratch_for(idx, ("gather",), spec)
         buf["idxs"][:] = routed["idxs"]
         buf["mask"][:] = routed["mask"]
-        self.stats["exchange_index_bytes"] += n * 8   # idx + mask word
-        self.stats["exchange_row_bytes"] += n * blk * g.op.emb_len * 4 \
+        self.stats["exchange_index_bytes"] += \
+            routed["cold_segments"] * 8   # idx + mask word
+        self.stats["hot_lookups"] += routed["hot_segments"]
+        self.stats["cold_lookups"] += routed["cold_segments"]
+        self.stats["exchange_row_bytes"] += n * blk * plan.op.emb_len * 4 \
             * (s - 1)
         fn = self._shard_fn(idx, u, ("gather",))
         return fn(u.table, u.roff,
@@ -507,7 +484,7 @@ class ProgramExecutor:
 
     def _marshal_single(self, idx: int, u: _UnitState, inputs: dict):
         """Singleton unit: device-transfer the per-step operands, bucketing
-        the ragged CSR streams."""
+        the ragged CSR streams to the plan's capacity lattice."""
         op = u.res.op
         name = u.unit.names[0]
         ins = inputs[name]
@@ -524,10 +501,10 @@ class ProgramExecutor:
         else:
             ptrs = np.asarray(ins["ptrs"], np.int64)
         nnz = int(ptrs[-1])
-        cap = kops.lookup_capacity(nnz)
-        ml = kops.grid_capacity(int(np.diff(ptrs).max(initial=0)))
+        cap = u.plan.lattice.lookup_capacity(nnz)
+        ml = u.plan.lattice.grid_capacity(int(np.diff(ptrs).max(initial=0)))
         key = "x" if op.kind == "fusedmm" else "table"
-        need_vals = (op.weighted or op.kind == "spmm") and "vals" in ins
+        need_vals = u.plan.need_vals and "vals" in ins
         spec = {"ptrs": ((op.num_segments + 1,), np.int32),
                 "idxs": ((cap,), np.int32)}
         if need_vals:
@@ -627,6 +604,39 @@ class ProgramExecutor:
         while self._inflight:
             self._inflight.popleft().result()
 
+    def access_plan_stats(self) -> dict:
+        """The compiled access side, observable: per-plan hot/cold layout,
+        cost-model exchange estimate vs. the measured counters, and the
+        plan-build time the ``plan-access`` pass recorded."""
+        fused = [u for u in self._units if u.group is not None]
+        steps = self.stats["steps"]
+        est_idx = sum(
+            cost_model.exchange_bytes(u.group.member_ops,
+                                      self.shards)["index_bytes"]
+            for u in fused) * steps
+        hot = self.stats["hot_lookups"]
+        cold = self.stats["cold_lookups"]
+        total = hot + cold
+        return {
+            "shards": self.shards,
+            "units": len(self._units),
+            "fused_units": len(fused),
+            "hot_rows": sum(u.plan.hot_rows_total for u in fused),
+            "hot_slab_bytes": sum(u.plan.hot_slab_bytes for u in fused),
+            "hot_lookups": hot,
+            "cold_lookups": cold,
+            "hot_traffic_fraction": round(hot / total, 4) if total else 0.0,
+            "exchange_index_bytes": self.stats["exchange_index_bytes"],
+            # the interleaved (no hot slab) cost-model estimate — actual
+            # below it means the hot slab absorbed that much routed volume
+            "exchange_index_bytes_est": est_idx,
+            "exchange_savings_bytes": max(
+                0, est_idx - self.stats["exchange_index_bytes"]),
+            "plan_build_s": round(sum(
+                r.duration_s for r in self.compiled.pass_records()
+                if r.name == "plan-access" and r.ran), 6),
+        }
+
 
 # ---------------------------------------------------------------------------
 # Executor cache: one steady-state executor per program signature, kept
@@ -640,7 +650,8 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  vlen: int = 128, interpret: Optional[bool] = None,
                  budget: Optional[FusionBudget] = None,
                  depth: int = 2, backend: str = "pallas",
-                 mesh=None, shard_axis: str = "model") -> ProgramExecutor:
+                 mesh=None, shard_axis: str = "model",
+                 hot_rows=None) -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -655,23 +666,35 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     stacked tables partition over ``mesh.shape[shard_axis]`` shards and the
     ``budget`` is rewritten to budget per-shard VMEM (``FusionBudget.shards``
     — part of the compile-cache key, so replicated and sharded plans never
-    collide).  A 1-wide axis (or ``mesh=None``) is the single-device path."""
+    collide).  A 1-wide axis (or ``mesh=None``) is the single-device path.
+
+    ``hot_rows`` (``{op name: replicated row ids}``, e.g. from
+    :func:`repro.core.access_plan.hot_rows_from_traces`) selects
+    locality-aware hot/cold sharding: the classified Zipf head of each
+    vocab is replicated on every shard (local lookups, zero exchange) while
+    the tail stays interleave-sharded.  Ignored on the single-device path;
+    part of both cache keys."""
     # canonicalize defaults so explicit-default calls hit the same entry
     interpret = kops.default_interpret() if interpret is None else interpret
     shards = sp.shard_count(mesh, shard_axis)
     if shards == 1:
         mesh = None
+        hot_rows = None
     budget = budget or FusionBudget()
     if budget.shards != shards:
         budget = dataclasses.replace(budget, shards=shards)
+    hot_spec = ap.canonical_hot(hot_rows)
     key = (program.signature(), opt_level, vlen, interpret, budget, depth,
-           backend, mesh, shard_axis if mesh is not None else None)
+           backend, mesh, shard_axis if mesh is not None else None,
+           hot_spec)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
-    compiled = compile_program(program, opt_level, vlen=vlen, budget=budget)
+    compiled = compile_program(program, opt_level, vlen=vlen, budget=budget,
+                               hot_rows=hot_rows)
     ex = ProgramExecutor(compiled, interpret=interpret, depth=depth,
-                         backend=backend, mesh=mesh, shard_axis=shard_axis)
+                         backend=backend, mesh=mesh, shard_axis=shard_axis,
+                         hot_rows=hot_rows)
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 

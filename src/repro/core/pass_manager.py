@@ -26,6 +26,7 @@ from typing import Callable, Optional
 
 from . import scf as scf_ir
 from . import slc as slc_ir
+from .access_plan import AccessPlan, plan_access_pass
 from .decouple import decouple
 from .dlc import DlcProgram, lower_to_dlc
 from .ops import EmbeddingOp
@@ -36,8 +37,10 @@ from .slc import SlcFunc, SlcVerifyError
 #: IR stages a pass may declare.  ``op`` is the frontend EmbeddingOp /
 #: EmbeddingProgram level; ``slcv`` is SLC after vectorization (slcv.for
 #: loops present); ``program`` marks program-level passes (fusion) that the
-#: driver in :mod:`repro.core.pipeline` runs before per-op compilation.
-STAGES = ("program", "op", "scf", "slc", "slcv", "dlc")
+#: driver in :mod:`repro.core.pipeline` runs before per-op compilation;
+#: ``access`` is the host-side companion of the DLC artifact — the
+#: :class:`~repro.core.access_plan.AccessPlan` emitted by ``plan-access``.
+STAGES = ("program", "op", "scf", "slc", "slcv", "dlc", "access")
 
 
 class PassManagerError(Exception):
@@ -100,6 +103,11 @@ def default_passes() -> list:
              min_level=3),
         Pass("lower-dlc", ("slc", "slcv"), lambda fn, **_: lower_to_dlc(fn),
              produces="dlc"),
+        # the host-side access artifact: stream layout, capacity-bucket
+        # lattice, shard routing table and hot/cold classification as data —
+        # what every host marshaling path interprets (repro.core.access_plan)
+        Pass("plan-access", "dlc", plan_access_pass, produces="access",
+             options=("frontend_op", "group", "shards", "hot_rows")),
     ]
 
 
@@ -123,6 +131,12 @@ def verify_ir(stage: str, unit) -> None:
         tokens = [c.token for c in unit.cases]
         if len(tokens) != len(set(tokens)):
             raise SlcVerifyError(f"duplicate DLC case tokens: {tokens}")
+    elif stage == "access":
+        if not isinstance(unit, AccessPlan):
+            raise SlcVerifyError(
+                f"stage access holds {type(unit).__name__}")
+        if unit.local_rows <= 0 or len(unit.roff) != unit.num_segments:
+            raise SlcVerifyError("access plan has inconsistent geometry")
 
 
 class PassManager:
@@ -158,6 +172,9 @@ class PassManager:
         SLC/SLCV function — and ``dlc``).
         """
         unit, stage = op, "op"
+        # the frontend op is always available to passes that declare it
+        # (plan-access rebuilds the host stream layout from it)
+        options.setdefault("frontend_op", op)
         artifacts: dict = {}
         records: list = []
         for p in self.passes:

@@ -36,6 +36,7 @@ straggler.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Optional
 
 import numpy as np
@@ -212,48 +213,51 @@ def _build_group(prog: EmbeddingProgram, members: tuple) -> FusedGroup:
 
 
 # ---------------------------------------------------------------------------
-# Runtime marshaling: per-op inputs <-> fused inputs/outputs
+# Runtime marshaling: per-op inputs <-> fused inputs/outputs.
+#
+# The layout logic lives in repro.core.access_plan — these helpers build the
+# group's (single-device) AccessPlan and interpret it, so the one-shot path
+# can never diverge from what the executor and the shard planner marshal.
 # ---------------------------------------------------------------------------
 
-def _member_ptrs(op: EmbeddingOp, ins: dict) -> np.ndarray:
-    """CSR offsets of one member (kg: the degenerate one-per-segment CSR)."""
-    if op.kind == "kg":
-        return np.arange(op.num_segments + 1, dtype=np.int64)
-    return np.asarray(ins["ptrs"], np.int64)
+#: group -> its single-device AccessPlan.  Weak-keyed: the one-shot helpers
+#: below run once per program execution and the plan build is O(vocab), so
+#: rebuilding per call would dominate small interpreted steps; weak keys
+#: keep dropped groups (and their numpy remap arrays) collectable.
+_PLAN_CACHE = weakref.WeakKeyDictionary()
+
+
+def _plan_of(group: FusedGroup):
+    from ..access_plan import plan_for_group
+    plan = _PLAN_CACHE.get(group)
+    if plan is None:
+        plan = _PLAN_CACHE[group] = plan_for_group(group)
+    return plan
 
 
 def stack_tables(group: FusedGroup, inputs: dict) -> np.ndarray:
-    """Row-stack the member tables per the compile-time layout.
+    """Row-stack the member tables per the compiled AccessPlan layout.
 
-    Placement follows ``group.row_offsets`` (which honors the program's
+    Placement follows the plan's slots (which honor the program's
     shared-table annotation): each declared table slot is written once into
     the stacked buffer, so the runtime marshaling can never diverge from the
     compiled fused op — regardless of whether shared tables arrive as one
     array object or equal-valued copies.
     """
-    op0 = group.member_ops[0]
-    blk = op0.block_rows if op0.kind == "gather" else 1
-    total_rows = group.op.num_embeddings * blk
-    table = np.empty((total_rows, op0.emb_len), np.dtype(op0.dtype))
-    placed: set = set()
-    for name, op, base in zip(group.members, group.member_ops,
-                              group.row_offsets):
+    plan = _plan_of(group)
+    parts = []
+    for slot, name in zip(plan.slots, plan.slot_first_member):
         tbl = np.asarray(inputs[name]["table"])
-        row_base = base * blk
-        expect = op.num_embeddings * blk
+        expect = slot.rows * plan.blk
         assert tbl.shape[0] == expect, \
             f"{name}: table has {tbl.shape[0]} rows, op declares {expect}"
-        if base not in placed:      # shared slots are stacked once
-            placed.add(base)
-            table[row_base:row_base + tbl.shape[0]] = tbl
-    return table
+        parts.append(tbl)
+    return plan.stack_np(parts)
 
 
 def group_roff(group: FusedGroup) -> np.ndarray:
     """The per-segment table-offset stream (static per signature)."""
-    return np.concatenate(
-        [np.full(op.num_segments, base, np.int32)
-         for op, base in zip(group.member_ops, group.row_offsets)])
+    return _plan_of(group).roff
 
 
 def fuse_index_inputs(group: FusedGroup, inputs: dict) -> dict:
@@ -262,35 +266,7 @@ def fuse_index_inputs(group: FusedGroup, inputs: dict) -> dict:
     except the stacked table (see :func:`stack_tables`).  Unweighted members
     of an upcast group emit a constant ⊗-identity ``vals`` run; kg members
     emit their degenerate one-per-segment CSR."""
-    fused_in: dict = {"roff": group_roff(group)}
-    op0 = group.member_ops[0]
-    if op0.kind == "gather":
-        fused_in["idxs"] = np.concatenate(
-            [np.asarray(inputs[n]["idxs"]) for n in group.members])
-        return fused_in
-
-    ptrs_parts: list = []
-    idxs_parts: list = []
-    vals_parts: list = []
-    need_vals = group.op.weighted or group.op.kind == "spmm"
-    nnz = 0
-    for name, op in zip(group.members, group.member_ops):
-        p = _member_ptrs(op, inputs[name])
-        ptrs_parts.append(p[:-1] + nnz if ptrs_parts else p[:-1])
-        idxs_parts.append(np.asarray(inputs[name]["idxs"]))
-        if need_vals:
-            v = inputs[name].get("vals")
-            if v is None:   # unit-weight upcast
-                v = np.full(int(p[-1]), group.unit_weight,
-                            np.dtype(op.dtype))
-            vals_parts.append(np.asarray(v))
-        nnz += int(p[-1])
-    fused_in["ptrs"] = np.concatenate(
-        ptrs_parts + [np.asarray([nnz])]).astype(np.int32)
-    fused_in["idxs"] = np.concatenate(idxs_parts)
-    if need_vals:
-        fused_in["vals"] = np.concatenate(vals_parts)
-    return fused_in
+    return _plan_of(group).fused_index_inputs(inputs)
 
 
 def fuse_inputs(group: FusedGroup, inputs: dict) -> dict:

@@ -34,6 +34,7 @@ import time
 from collections import OrderedDict
 from typing import Optional, Union
 
+from .access_plan import AccessPlan, canonical_hot
 from .cost_model import FusionBudget
 from .dlc import DlcProgram
 from .ops import EmbeddingOp, EmbeddingProgram, single_op_program
@@ -63,6 +64,9 @@ class CompileResult:
     slc: SlcFunc
     dlc: DlcProgram
     records: list = dataclasses.field(default_factory=list)  # PassRecords
+    #: the host-side access artifact of this unit (plan-access pass): stream
+    #: layout, capacity-bucket lattice, shard routing + hot/cold split
+    access_plan: Optional[AccessPlan] = None
 
     @property
     def opt(self) -> dict:
@@ -216,30 +220,39 @@ def clear_compile_cache() -> None:
 
 
 def _compile_one(op: EmbeddingOp, opt_level: str, vlen: int,
-                 pm: PassManager) -> CompileResult:
-    arts, records = pm.run(op, opt_level_index(opt_level), vlen=vlen)
+                 pm: PassManager, group=None, shards: int = 1,
+                 hot_rows=None) -> CompileResult:
+    arts, records = pm.run(op, opt_level_index(opt_level), vlen=vlen,
+                           group=group, shards=shards, hot_rows=hot_rows)
     return CompileResult(op, opt_level, arts["scf"], arts["slc"],
-                         arts["dlc"], records)
+                         arts["dlc"], records,
+                         access_plan=arts.get("access"))
 
 
 def compile_program(program: EmbeddingProgram, opt_level: str = "O3",
                     vlen: int = 128, pm: Optional[PassManager] = None,
                     fuse: bool = True, use_cache: bool = True,
-                    budget: Optional[FusionBudget] = None
-                    ) -> ProgramCompileResult:
+                    budget: Optional[FusionBudget] = None,
+                    hot_rows=None) -> ProgramCompileResult:
     """Compile every lookup of a model step as one unit.
 
     The fusion pass first merges compatible multi-table lookups — under the
     ``budget`` resource envelope: a compatibility group whose batched plan
     would overflow the estimated VMEM working set is split into balanced
     sub-units (see ``passes/fuse.py``).  Each resulting unit then runs the
-    full PassManager pipeline.  Results are memoized (bounded LRU) on
-    ``(program.signature(), opt_level, vlen, fuse, budget)`` so steady-state
-    callers (decode servers, train steps) pay compilation once.
+    full PassManager pipeline, whose final ``plan-access`` pass emits the
+    unit's :class:`~repro.core.access_plan.AccessPlan` for
+    ``budget.shards`` vocab shards and the ``hot_rows`` hot/cold
+    classification (``{op name: replicated row ids}``, e.g. from
+    :func:`~repro.core.access_plan.hot_rows_from_traces`).  Results are
+    memoized (bounded LRU) on ``(program.signature(), opt_level, vlen,
+    fuse, budget, hot_rows)`` so steady-state callers (decode servers,
+    train steps) pay compilation once.
     """
     assert opt_level in OPT_LEVELS, opt_level
     budget = budget or FusionBudget()  # canonical: None = the default budget
-    key = (program.signature(), opt_level, vlen, fuse, budget)
+    key = (program.signature(), opt_level, vlen, fuse, budget,
+           canonical_hot(hot_rows))
     if use_cache and pm is None:
         cached = _COMPILE_CACHE.get(key)
         if cached is not None:
@@ -261,11 +274,14 @@ def compile_program(program: EmbeddingProgram, opt_level: str = "O3",
     units: list = []
     for spec in units_spec:
         if isinstance(spec, FusedGroup):
-            res = _compile_one(spec.op, opt_level, vlen, pm_)
+            res = _compile_one(spec.op, opt_level, vlen, pm_, group=spec,
+                               shards=budget.shards, hot_rows=hot_rows)
             units.append(CompiledUnit(spec.members, res, group=spec))
         else:
             name, op = spec
-            res = _compile_one(op, opt_level, vlen, pm_)
+            # singleton units always execute unsharded (only fused stacked
+            # tables vocab-partition), so their plan is the 1-shard plan
+            res = _compile_one(op, opt_level, vlen, pm_, shards=1)
             units.append(CompiledUnit((name,), res))
 
     out = ProgramCompileResult(program, opt_level, vlen, units, records)

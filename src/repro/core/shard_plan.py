@@ -1,51 +1,45 @@
-"""Vocab-sharded fused programs — the distributed half of the executor.
+"""Vocab-sharded fused programs — the device half of the sharded executor.
 
 At serving scale one device cannot hold the fused stacked tables, so the
 steady-state executor shards them along the vocab (row) dimension over the
 ``model`` axis of the production mesh, FlexEMR-style: the *indices* move to
 the data, the data never moves to the compute.
 
-Layout (one fused unit, S shards)::
+All layout and routing decisions — the interleaved cold split, the
+replicated hot slabs, per-lookup owner/local-address resolution, the
+capacity buckets of the exchange — live in the compiled
+:class:`~repro.core.access_plan.AccessPlan` (the ``plan-access`` pass).
+This module only *realizes* a plan on a mesh:
 
-    stacked slots:   [ slot0 rows | slot1 rows | ... ]        (replicated PR2)
-    sharded:  shard s holds rows [s·C_t, (s+1)·C_t) of EVERY slot t,
-              C_t = ceil(rows_t / S), stacked in slot order:
-
-        global array (S·L, E), L = Σ_t C_t, NamedSharding P(axis, None)
-        shard s = [ slot0[s·C0:(s+1)·C0] | slot1[s·C1:(s+1)·C1] | ... ]
-
-    so every shard's *local* stacked table has the same shape (SPMD) and the
-    same local slot bases — one replicated ``roff`` stream serves all shards.
+* :func:`shard_stack_tables` materializes the plan's per-shard local tables
+  (cold slices + replicated hot slabs) as one row-sharded global array;
+* :func:`put_sharded` / :func:`put_replicated` place the routed ``(S, …)``
+  exchange buckets (the single-controller stand-in for the indices-out
+  ``all_to_all``);
+* ``make_csr_body`` / ``make_gather_body`` / :func:`sharded_call` build the
+  ``jit(shard_map(...))`` execute bodies: local pool + pooled-rows-back
+  combine (``psum``/``pmax``/``pmin`` with ⊕-identity-exact empty-segment
+  handling).
 
 Exchange protocol (per step, the access side doing the all-to-all on the
 offset stream):
 
-    1. **indices out** — the host (the access unit of the program-scope DAE
-       machine) buckets the fused CSR stream by owning shard
-       (``owner = idx // C_t``), rebases each index to the owner's local rows
-       (``idx - owner·C_t``) and re-emits one valid CSR per shard over ALL
-       fused segments.  The buckets are padded to the pow-2 nnz /
-       quarter-octave ``max_lookups`` capacities of :mod:`repro.kernels.sls`,
-       so the exchange is retrace-free across ragged steps.  A single
-       sharded ``device_put`` of the ``(S, …)`` buckets realizes the
-       scatter; on a multi-host mesh the identical buckets feed
-       ``jax.lax.all_to_all`` (see docs/executor.md).
+    1. **indices out** — the host interprets the AccessPlan: every lookup
+       resolves to ``(owner shard, fully-rebased local address)``; hot rows
+       are replicated so their lookups are *local* on a round-robin shard
+       (zero exchange), cold rows route to ``cold_rank // C_t``.  Buckets
+       are padded to the plan's capacity lattice, so the exchange is
+       retrace-free across ragged steps.
     2. **local pool** — each shard runs the batched SLS kernel (or the XLA
-       reference body) over its local sub-CSR with ``seg_base`` rebased to
-       the local slot bases: partial pooled rows for every segment.
+       reference body) over its local sub-CSR; since routed indices arrive
+       fully rebased, the kernel's ``seg_base`` stream is all-zero here.
     3. **pooled rows back** — the partial pools combine across shards with
        ``psum`` (⊕=add) / ``pmax`` / ``pmin``; locally-empty segments
-       contribute the ⊕-identity, and globally-empty segments are fixed to 0
-       afterwards (the SLS convention), so a shard receiving zero indices
+       contribute the ⊕-identity, and globally-empty segments are fixed to
+       0 afterwards (the SLS convention), so a shard receiving zero indices
        for a step is a no-op, not a hazard.
-
-Everything here is pure layout/routing/trace machinery; the executor
-(:mod:`repro.core.executor`) owns the caches and the step loop.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,8 +48,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops as kops
 from ..launch.sharding import replicated_sharding, table_row_sharding
+from .access_plan import AccessPlan
 from .jax_compat import shard_map
-from .passes.fuse import FusedGroup
 
 _ADD_IDENT = {"add": 0.0, "max": -np.inf, "min": np.inf}
 
@@ -70,165 +64,35 @@ def shard_count(mesh, axis: str = "model") -> int:
 
 
 # ---------------------------------------------------------------------------
-# Layout
+# Layout realization: the plan's per-shard tables on a mesh
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class ShardLayout:
-    """Vocab partition of one fused unit's stacked table over S shards."""
-
-    shards: int
-    blk: int                 # physical rows per index unit (gather blocks)
-    slot_rows: tuple         # index-unit rows of each stacked slot
-    slot_caps: tuple         # per-slot per-shard capacity C_t = ceil(rows/S)
-    slot_local_base: tuple   # local base of each slot (index units)
-    member_slot: tuple       # member i -> slot index
-
-    @property
-    def local_rows(self) -> int:
-        """Index-unit rows of ONE shard's local stacked table (L)."""
-        return sum(self.slot_caps)
-
-    @property
-    def table_bytes_per_shard(self) -> int:
-        return self.local_rows * self.blk * 4  # per f32 column; ×E outside
-
-    def member_cap(self, i: int) -> int:
-        """Ownership divisor of member ``i``'s indices."""
-        return self.slot_caps[self.member_slot[i]]
-
-    def member_local_base(self, i: int) -> int:
-        return self.slot_local_base[self.member_slot[i]]
-
-
-def build_layout(group: FusedGroup, shards: int) -> ShardLayout:
-    """Partition the group's stacked slots over ``shards`` (ceil-split, so
-    ``owner = idx // C_t`` is one integer divide on the access side)."""
-    assert shards >= 1, shards
-    op0 = group.member_ops[0]
-    blk = op0.block_rows if op0.kind == "gather" else 1
-    slot_of_base: dict = {}
-    slot_rows: list = []
-    member_slot: list = []
-    for op, base in zip(group.member_ops, group.row_offsets):
-        if base not in slot_of_base:
-            slot_of_base[base] = len(slot_rows)
-            slot_rows.append(op.num_embeddings)
-        member_slot.append(slot_of_base[base])
-    caps = tuple(-(-r // shards) for r in slot_rows)
-    local_base = tuple(int(x) for x in np.cumsum((0,) + caps[:-1]))
-    return ShardLayout(shards, blk, tuple(slot_rows), caps, local_base,
-                       tuple(member_slot))
-
-
-def interleave_parts_np(parts: list, layout: ShardLayout) -> np.ndarray:
-    """Numpy oracle of the sharded stacking: ``(S·L·blk, E)`` where row block
-    ``s`` is shard ``s``'s local stacked table (slot slices, zero-padded)."""
-    s, blk = layout.shards, layout.blk
-    emb = parts[0].shape[1]
-    out = np.zeros((s * layout.local_rows * blk, emb), parts[0].dtype)
-    for p, rows, cap, base in zip(parts, layout.slot_rows, layout.slot_caps,
-                                  layout.slot_local_base):
-        p = np.asarray(p)
-        assert p.shape[0] == rows * blk, (p.shape, rows, blk)
-        for sh in range(s):
-            lo, hi = sh * cap, min((sh + 1) * cap, rows)
-            if lo >= hi:
-                continue
-            dst = (sh * layout.local_rows + base) * blk
-            out[dst:dst + (hi - lo) * blk] = p[lo * blk:hi * blk]
-    return out
-
-
-def shard_stack_tables(parts: list, layout: ShardLayout, mesh,
+def shard_stack_tables(parts: list, plan: AccessPlan, mesh,
                        axis: str) -> jax.Array:
-    """Device-side sharded stacking: pad each slot to ``S·C_t`` rows, stripe
-    by shard, concatenate the stripes per shard, and place the ``(S·L·blk, E)``
-    result row-sharded over ``axis`` — each device materializes only its own
-    ``(L·blk, E)`` slice."""
-    s, blk = layout.shards, layout.blk
-    stripes = []
-    for p, rows, cap in zip(parts, layout.slot_rows, layout.slot_caps):
+    """Device-side sharded stacking of one fused unit per its AccessPlan:
+    each slot's cold tail is striped over the shards (ceil-split, padded),
+    its hot slab is replicated into every shard's local table, and the
+    ``(S·L·blk, E)`` result is placed row-sharded over ``axis`` — each
+    device materializes only its own ``(L·blk, E)`` slice."""
+    s, blk = plan.shards, plan.blk
+    cold_stripes, hot_stripes = [], []
+    for slot, p in zip(plan.slots, parts):
         p = jnp.asarray(p)
-        pad = s * cap * blk - p.shape[0]
+        emb = p.shape[1]
+        if slot.hot_rows:
+            cold = jnp.take(p, plan.phys_rows(slot.cold_ids), axis=0)
+            hot = jnp.take(p, plan.phys_rows(slot.hot_ids), axis=0)
+        else:
+            cold, hot = p, None
+        pad = s * slot.cap * blk - cold.shape[0]
         if pad:
-            p = jnp.pad(p, ((0, pad), (0, 0)))
-        stripes.append(p.reshape(s, cap * blk, p.shape[1]))
-    glob = jnp.concatenate(stripes, axis=1).reshape(
-        s * layout.local_rows * blk, stripes[0].shape[-1])
+            cold = jnp.pad(cold, ((0, pad), (0, 0)))
+        cold_stripes.append(cold.reshape(s, slot.cap * blk, emb))
+        if hot is not None:
+            hot_stripes.append(jnp.broadcast_to(hot[None], (s,) + hot.shape))
+    glob = jnp.concatenate(cold_stripes + hot_stripes, axis=1).reshape(
+        s * plan.local_rows * blk, cold_stripes[0].shape[-1])
     return jax.device_put(glob, table_row_sharding(mesh, axis))
-
-
-def local_roff(group: FusedGroup, layout: ShardLayout) -> np.ndarray:
-    """Per-segment table-offset stream rebased to the LOCAL slot bases —
-    identical on every shard (the layout gives all shards the same local
-    geometry), so one replicated array serves the whole mesh."""
-    return np.concatenate(
-        [np.full(op.num_segments, layout.member_local_base(i), np.int32)
-         for i, op in enumerate(group.member_ops)])
-
-
-# ---------------------------------------------------------------------------
-# Host-side offset-stream routing (step 1 of the exchange)
-# ---------------------------------------------------------------------------
-
-def route_csr(layout: ShardLayout, num_segments: int, seg: np.ndarray,
-              idxs: np.ndarray, caps: np.ndarray,
-              vals: Optional[np.ndarray] = None) -> dict:
-    """Bucket one fused CSR stream by owning shard.
-
-    ``seg``/``idxs``/``caps`` are per-lookup streams (fused segment id,
-    global member-table row, ownership divisor of that member).  Returns the
-    per-shard re-emitted CSR: ``ptrs (S, B+1)``, per-shard nnz, the
-    owner-sorted local indices/values, and the capacity buckets the caller
-    should pad to (pow-2 nnz, quarter-octave max_lookups — the same buckets
-    the single-device kernel retraces on, so the exchange reuses them)."""
-    s = layout.shards
-    owner = idxs // caps
-    local = (idxs - owner * caps).astype(np.int32)
-    counts = np.zeros((s, num_segments), np.int64)
-    if len(seg):
-        np.add.at(counts, (owner, seg), 1)
-    nnz = counts.sum(axis=1)
-    ptrs = np.zeros((s, num_segments + 1), np.int32)
-    np.cumsum(counts, axis=1, out=ptrs[:, 1:])
-    # stable owner sort keeps each shard's stream segment-ordered (the
-    # source stream is), so the re-emitted per-shard CSR is already valid
-    perm = np.argsort(owner, kind="stable")
-    bounds = np.zeros(s + 1, np.int64)
-    np.cumsum(nnz, out=bounds[1:])
-    cap, ml = kops.exchange_capacity(nnz, counts.max(axis=1, initial=0))
-    return {
-        "ptrs": ptrs,
-        "nnz": nnz,
-        "idxs": local[perm],
-        "vals": None if vals is None else np.asarray(vals)[perm],
-        "bounds": bounds,
-        "cap": cap,
-        "max_lookups": ml,
-    }
-
-
-def segment_caps(group: FusedGroup, layout: ShardLayout) -> np.ndarray:
-    """Per-segment ownership divisor (each segment's member's slot cap) —
-    static per signature, computed once at bind time."""
-    return np.concatenate(
-        [np.full(op.num_segments, layout.member_cap(i), np.int64)
-         for i, op in enumerate(group.member_ops)])
-
-
-def route_gather(layout: ShardLayout, caps: np.ndarray,
-                 idxs: np.ndarray) -> dict:
-    """Bucket a fused gather's one-index-per-segment stream: every shard
-    gets the full (B,) index vector with non-owned slots masked out (a
-    gather's 'pool' is the row itself, so the mask IS the partial pool)."""
-    owner = idxs // caps
-    local = (idxs - owner * caps).astype(np.int32)
-    s = layout.shards
-    shard_ids = np.arange(s)[:, None]
-    mask = (owner[None, :] == shard_ids)
-    return {"idxs": np.where(mask, local[None, :], 0).astype(np.int32),
-            "mask": mask.astype(np.float32)}
 
 
 def put_sharded(arr: np.ndarray, mesh, axis: str) -> jax.Array:
@@ -285,7 +149,7 @@ def make_csr_body(op, *, axis: str, backend: str, max_lookups: int,
     """shard_map body of one fused CSR unit: local pool + pooled-rows-back
     combine.  The bucketed operands arrive with a leading length-1 shard dim
     (in_specs P(axis, …)); the table arrives as the local (L·blk, E) slice;
-    ``roff`` replicated."""
+    ``roff`` replicated (all-zero — routed indices arrive fully rebased)."""
     add_op, mul_op = op.semiring.add, op.semiring.mul
     nseg = op.num_segments
 

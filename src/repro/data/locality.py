@@ -70,6 +70,39 @@ def hit_rate(trace: np.ndarray, cache_vectors: int) -> float:
     return float((d[d >= 0] <= cache_vectors).sum() / len(d))
 
 
+def row_reuse_scores(trace: np.ndarray, num_rows: int) -> np.ndarray:
+    """Per-row replication-benefit score: the number of accesses to each row
+    with a *finite* reuse distance (i.e. its re-accesses).
+
+    This is exactly the traffic a replicated copy of the row would absorb —
+    a row touched once contributes nothing (its single access pays the
+    exchange either way), while the Zipf head re-accessed thousands of times
+    is where a hot slab removes exchange volume.  First accesses (distance
+    -1 in :func:`reuse_distances`) are excluded by construction."""
+    trace = np.asarray(trace, np.int64)
+    d = reuse_distances(trace)
+    scores = np.zeros(num_rows, np.int64)
+    reused = trace[d >= 0]
+    if len(reused):
+        np.add.at(scores, reused, 1)
+    return scores
+
+
+def classify_hot(trace: np.ndarray, num_rows: int, max_hot: int) -> np.ndarray:
+    """The Zipf head of one vocab: up to ``max_hot`` row ids worth
+    replicating, ranked by :func:`row_reuse_scores` (ties broken by row id
+    for determinism), returned sorted ascending.  Rows with zero reuse are
+    never classified hot — an all-distinct trace yields an empty head."""
+    if max_hot <= 0 or len(trace) == 0:
+        return np.zeros(0, np.int64)
+    scores = row_reuse_scores(trace, num_rows)
+    candidates = np.flatnonzero(scores > 0)
+    if len(candidates) == 0:
+        return np.zeros(0, np.int64)
+    order = np.lexsort((candidates, -scores[candidates]))
+    return np.sort(candidates[order[:int(max_hot)]])
+
+
 def make_trace(num_vectors: int, num_accesses: int, locality: str = "L1",
                seed: int = 0) -> np.ndarray:
     """Synthetic DLRM-style traces with low/medium/high locality

@@ -138,43 +138,9 @@ def max_lookups_of(ptrs: np.ndarray) -> int:
     return int(np.diff(ptrs).max(initial=0)) or 1
 
 
-def lookup_capacity(n: int) -> int:
-    """Round a ragged extent up to its power-of-two capacity bucket (≥ 1).
-
-    ``max_lookups`` and the nnz of the idxs/vals streams are *static* kernel
-    parameters: every distinct value is a distinct jit specialization.  The
-    steady-state executor pads to the bucket so a ragged batch sequence
-    reuses one trace per bucket; the kernel's ``@pl.when(j < n)`` tail mask
-    (and CSR ``ptrs`` bounds for idxs) make the padding slots free of
-    side effects.
-    """
-    n = max(int(n), 1)
-    return 1 << (n - 1).bit_length()
-
-
-def grid_capacity(n: int) -> int:
-    """Quarter-octave bucket for the ``max_lookups`` *grid* extent.
-
-    Unlike the operand buffers (power-of-two is right there: the bucket only
-    controls retrace count), every padded ``max_lookups`` slot is a real
-    masked grid step, so a 2× overshoot doubles the kernel's inner loop.
-    Rounding to the next quarter of a power of two keeps the overshoot
-    ≤ 33% while still giving ragged steps only ~4 buckets per octave."""
-    n = max(int(n), 1)
-    if n <= 4:
-        return n
-    q = 1 << ((n - 1).bit_length() - 2)
-    return -(-n // q) * q
-
-
-def exchange_capacity(nnz_per_shard, max_seg_per_shard) -> tuple:
-    """Joint ``(nnz_cap, max_lookups)`` bucket of one vocab-sharded exchange
-    step (see :mod:`repro.core.shard_plan`): every shard's routed bucket is
-    padded to the SAME capacities — SPMD needs uniform shapes — so the
-    bucket is the max over shards, rounded with the same pow-2 /
-    quarter-octave rules the single-device executor retraces on.  A shard
-    receiving zero indices still gets the ≥1-slot bucket (all-empty CSR is a
-    valid kernel input)."""
-    nnz = max((int(n) for n in nnz_per_shard), default=0)
-    seg = max((int(n) for n in max_seg_per_shard), default=0)
-    return lookup_capacity(nnz), grid_capacity(seg)
+# The shape-bucketing policy (pow-2 nnz, quarter-octave max_lookups, joint
+# exchange buckets) lives in ONE canonical module — repro.core.capacity —
+# carried by every compiled AccessPlan; re-exported here so kernel callers
+# keep their historical import path.
+from repro.core.capacity import (lookup_capacity, grid_capacity,  # noqa: E402
+                                 exchange_capacity)

@@ -260,7 +260,8 @@ class LM:
         return compile_program(self.embedding_program(batch, seq), opt_level)
 
     def embedding_executor(self, batch: int, seq: int,
-                           opt_level: str = "O3", mesh="auto", **kw):
+                           opt_level: str = "O3", mesh="auto",
+                           hot_rows=None, **kw):
         """The steady-state executor of this model's embedding program:
         compile (cached) + device-resident marshaling cache + double-buffered
         step loop (:mod:`repro.core.executor`).  Memoized per signature, so
@@ -269,13 +270,16 @@ class LM:
         ``mesh="auto"`` inherits the model's ``ShardCtx`` mesh: with a
         >1-wide model axis the fused stacked tables come back vocab-sharded
         over it (per-device footprint ÷ shards); pass ``mesh=None`` to force
-        the replicated single-device executor."""
+        the replicated single-device executor.  ``hot_rows`` (e.g. from
+        :func:`repro.core.access_plan.hot_rows_from_traces` over decode
+        token traces) replicates the classified Zipf head of each vocab on
+        every shard so those lookups skip the offset-stream exchange."""
         from ..core.executor import executor_for
         if mesh == "auto":
             mesh = self.shard.mesh
         return executor_for(self.embedding_program(batch, seq), opt_level,
                             mesh=mesh, shard_axis=self.shard.model_axis,
-                            **kw)
+                            hot_rows=hot_rows, **kw)
 
     def embedding_table_inputs(self, params) -> dict:
         """The *param-backed* tables of :meth:`embedding_program`, keyed the

@@ -68,6 +68,9 @@ class DecodeServer:
         s["executor_cache"] = self._emb_exec.executor_cache_stats()
         s["executor"] = dict(self.emb_executor.stats)
         s["executor"]["shards"] = self.emb_executor.shards
+        # the compiled access side, observable: hot/cold layout, exchange
+        # bytes est. vs. actual, per-pass plan-build time (plan-access)
+        s["access_plans"] = self.emb_executor.access_plan_stats()
         return s
 
     def submit(self, req: Request):

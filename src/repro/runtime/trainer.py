@@ -169,6 +169,8 @@ class Trainer:
                 executor_cache_stats()
             out["embedding_compile"]["executor"] = \
                 dict(self.emb_executor.stats)
+            out["embedding_compile"]["access_plans"] = \
+                self.emb_executor.access_plan_stats()
         return out
 
 

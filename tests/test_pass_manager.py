@@ -17,7 +17,7 @@ from repro.core.pipeline import (OPT_LEVELS, clear_compile_cache,
                                  run_interpreted, run_program_interpreted)
 
 ALL_PASSES = ["build-scf", "decouple", "vectorize", "bufferize",
-              "store-streams", "queue-align", "lower-dlc"]
+              "store-streams", "queue-align", "lower-dlc", "plan-access"]
 
 
 def _two_table_program(kind="sls", emb_len=10):
@@ -43,8 +43,8 @@ def test_pass_ordering_and_opt_gating():
         ran = [r.name for r in res.records if r.ran]
         # declared order is preserved and mandatory stages always run
         assert ran == [p for p in ALL_PASSES if p in ran]
-        assert ran[0] == "build-scf" and ran[-1] == "lower-dlc"
-        assert "decouple" in ran
+        assert ran[0] == "build-scf" and ran[-1] == "plan-access"
+        assert "decouple" in ran and "lower-dlc" in ran
         ran_by_lvl[lvl] = set(ran)
     assert "vectorize" not in ran_by_lvl["O0"]
     assert "vectorize" in ran_by_lvl["O1"]
@@ -66,6 +66,8 @@ def test_pass_records_stage_annotations():
     assert stages["decouple"] == "slc"
     assert stages["vectorize"] == "slcv"
     assert stages["lower-dlc"] == "dlc"
+    assert stages["plan-access"] == "access"
+    assert res.access_plan is not None
 
 
 def test_verifier_catches_malformed_slc():

@@ -1,9 +1,10 @@
-"""Vocab-sharded fused programs: shard layout/routing math, per-shard cost
-model, mesh-of-size-1 identity with the single-device executor, and (in a
-2-device subprocess, the ``test_launch`` pattern) end-to-end sharded
-numerics — mixed weighted/unweighted + kg fusion, max-semiring merge,
-empty shards, both execute backends, footprint halving, sharded
-``update_tables`` and the executor-cache keying."""
+"""Vocab-sharded fused programs: AccessPlan layout/routing math (incl. the
+hot/cold split), per-shard cost model, mesh-of-size-1 identity with the
+single-device executor, and (in a 2-device subprocess, the ``test_launch``
+pattern) end-to-end sharded numerics — mixed weighted/unweighted + kg
+fusion, max-semiring merge, empty shards/steps, hot-slab batches, both
+execute backends, footprint halving, sharded ``update_tables`` and the
+executor-cache keying."""
 import subprocess
 import sys
 import textwrap
@@ -11,6 +12,7 @@ import textwrap
 import numpy as np
 import pytest
 
+from repro.core import access_plan as ap
 from repro.core import cost_model, shard_plan as sp
 from repro.core.executor import (ProgramExecutor, clear_executor_cache,
                                  executor_cache_stats, executor_for)
@@ -23,8 +25,10 @@ from repro.kernels.sls import exchange_capacity
 
 
 def _csr_group():
+    # 'a' weighted -> the fused group unit-weight-upcasts and marshals a
+    # vals stream, so the routing tests cover the vals permutation too
     prog = EmbeddingProgram("g", (
-        ("a", EmbeddingOp("sls", 4, 10, 8, avg_lookups=3)),
+        ("a", EmbeddingOp("sls", 4, 10, 8, avg_lookups=3, weighted=True)),
         ("b", EmbeddingOp("sls", 3, 7, 8, avg_lookups=2)),
     ))
     units, _ = fuse_program(prog)
@@ -32,54 +36,117 @@ def _csr_group():
     return units[0]
 
 
+def _group_inputs(group, seg, idxs, vals=None):
+    """Split a fused (seg, idx) stream back into per-member input dicts."""
+    inputs = {}
+    pos = 0
+    for name, mop, off in zip(group.members, group.member_ops,
+                              group.seg_offsets):
+        mask = (seg >= off) & (seg < off + mop.num_segments)
+        counts = np.bincount(seg[mask] - off, minlength=mop.num_segments)
+        ptrs = np.zeros(mop.num_segments + 1, np.int64)
+        np.cumsum(counts, out=ptrs[1:])
+        ins = {"ptrs": ptrs, "idxs": idxs[mask]}
+        if vals is not None:
+            ins["vals"] = vals[mask]
+        inputs[name] = ins
+        pos += mask.sum()
+    return inputs
+
+
 # ---------------------------------------------------------------------------
-# Layout
+# AccessPlan layout
 # ---------------------------------------------------------------------------
 
-def test_layout_capacities_and_local_bases():
+def test_plan_layout_capacities_and_local_bases():
     g = _csr_group()
-    lay = sp.build_layout(g, shards=2)
-    assert lay.slot_rows == (10, 7)
-    assert lay.slot_caps == (5, 4)        # ceil splits
-    assert lay.slot_local_base == (0, 5)
-    assert lay.local_rows == 9
-    # every shard's local stacked table has the same geometry -> one roff
-    roff = sp.local_roff(g, lay)
-    assert roff.tolist() == [0, 0, 0, 0, 5, 5, 5]
+    plan = ap.plan_for_group(g, shards=2)
+    assert [s.rows for s in plan.slots] == [10, 7]
+    assert [s.cap for s in plan.slots] == [5, 4]        # ceil splits
+    assert [s.cold_base for s in plan.slots] == [0, 5]
+    assert plan.local_rows == 9
+    assert plan.hot_rows_total == 0
+    # single-device roff: the stacked slot bases per segment
+    assert plan.roff.tolist() == [0, 0, 0, 0, 10, 10, 10]
 
 
-def test_interleaved_stack_oracle_reconstructs_rows():
+def test_plan_hot_layout_reserves_slab_after_cold():
     g = _csr_group()
-    lay = sp.build_layout(g, shards=2)
+    plan = ap.plan_for_group(g, shards=2,
+                             hot_rows={"a": (2, 7), "b": (0,)})
+    s0, s1 = plan.slots
+    assert s0.hot_ids.tolist() == [2, 7] and s1.hot_ids.tolist() == [0]
+    assert s0.cold_rows == 8 and s1.cold_rows == 6
+    assert [s.cap for s in plan.slots] == [4, 3]
+    assert [s.cold_base for s in plan.slots] == [0, 4]
+    # hot slabs pack after ALL cold slices
+    assert s0.hot_base == 7 and s1.hot_base == 9
+    assert plan.local_rows == 7 + 3
+    assert plan.hot_slab_bytes == 3 * 8 * 4
+
+
+def test_hot_disabled_layout_matches_pr3_interleave():
+    """With no hot classification the plan's stack/routing must reduce to
+    the PR-3 interleaved ceil-split, element for element."""
+    g = _csr_group()
+    plan = ap.plan_for_group(g, shards=2)
     rng = np.random.default_rng(0)
     parts = [rng.standard_normal((10, 8)).astype(np.float32),
              rng.standard_normal((7, 8)).astype(np.float32)]
-    glob = sp.interleave_parts_np(parts, lay)
-    assert glob.shape == (2 * lay.local_rows, 8)
-    # ownership math: global row r of slot t lives on shard r // C_t at
-    # local offset base_t + (r - owner*C_t)
+    glob = plan.stack_np(parts)
+    assert glob.shape == (2 * plan.local_rows, 8)
+    # PR-3 ownership math: global row r of slot t lives on shard r // C_t
+    # at local offset base_t + (r - owner*C_t)
     for t, part in enumerate(parts):
-        cap = lay.slot_caps[t]
-        base = lay.slot_local_base[t]
+        cap = plan.slots[t].cap
+        base = plan.slots[t].cold_base
         for r in range(part.shape[0]):
             o = r // cap
             local = base + (r - o * cap)
             np.testing.assert_array_equal(
-                glob[o * lay.local_rows + local], part[r])
+                glob[o * plan.local_rows + local], part[r])
 
+
+def test_hot_stack_replicates_slab_on_every_shard():
+    g = _csr_group()
+    hot = {"a": (0, 9), "b": (3,)}
+    plan = ap.plan_for_group(g, shards=2, hot_rows=hot)
+    rng = np.random.default_rng(1)
+    parts = [rng.standard_normal((10, 8)).astype(np.float32),
+             rng.standard_normal((7, 8)).astype(np.float32)]
+    glob = plan.stack_np(parts)
+    for sh in range(2):
+        for t, part in enumerate(parts):
+            slot = plan.slots[t]
+            for pos, row in enumerate(slot.hot_ids):
+                np.testing.assert_array_equal(
+                    glob[sh * plan.local_rows + slot.hot_base + pos],
+                    part[row])
+            for rank, row in enumerate(slot.cold_ids):
+                o = rank // slot.cap
+                if o != sh:
+                    continue
+                np.testing.assert_array_equal(
+                    glob[sh * plan.local_rows + slot.cold_base
+                         + rank - o * slot.cap], part[row])
+
+
+# ---------------------------------------------------------------------------
+# AccessPlan routing
+# ---------------------------------------------------------------------------
 
 def test_route_csr_emits_valid_rebased_per_shard_csr():
     g = _csr_group()
-    lay = sp.build_layout(g, shards=2)
-    num_segments = g.op.num_segments
+    plan = ap.plan_for_group(g, shards=2)
+    num_segments = plan.num_segments
     # 7 segments; indices spread over both member tables
     seg = np.array([0, 0, 1, 3, 4, 4, 5, 6], np.int64)
     idxs = np.array([9, 2, 5, 0, 6, 1, 3, 4], np.int64)
-    caps = np.array([5, 5, 5, 5, 4, 4, 4, 4], np.int64)  # a: C=5, b: C=4
     vals = np.arange(8, dtype=np.float32)
-    routed = sp.route_csr(lay, num_segments, seg, idxs, caps, vals)
+    routed = plan.route_csr(_group_inputs(g, seg, idxs, vals))
     assert routed["cap"] == exchange_capacity(routed["nnz"], [0])[0]
-    # reconstruct: every (seg, local+owner*cap, val) triple must round-trip
+    assert routed["hot_nnz"] == 0 and routed["cold_nnz"] == 8
+    # reconstruct: every (seg, owner, local, val) triple must round-trip
     got = set()
     for o in range(2):
         p = routed["ptrs"][o]
@@ -90,35 +157,90 @@ def test_route_csr_emits_valid_rebased_per_shard_csr():
         pos = 0
         for b in range(num_segments):
             for _ in range(p[b + 1] - p[b]):
-                local = int(sh_idxs[pos])
-                assert 0 <= local < max(lay.slot_caps)
-                got.add((b, o, local, float(sh_vals[pos])))
+                got.add((b, o, int(sh_idxs[pos]), float(sh_vals[pos])))
                 pos += 1
-    want = {(int(s), int(i // c), int(i % c), float(v))
-            for s, i, c, v in zip(seg, idxs, caps, vals)}
+    # PR-3 oracle: member a has C=5 (slot base 0), member b C=4 (base 5)
+    caps = np.array([5, 5, 5, 5, 4, 4, 4, 4], np.int64)
+    base = np.array([0, 0, 0, 0, 5, 5, 5, 5], np.int64)
+    want = {(int(s), int(i // c), int(b + i % c), float(v))
+            for s, i, c, b, v in zip(seg, idxs, caps, base, vals)}
     assert got == want
+
+
+def test_route_csr_hot_rows_pay_no_exchange():
+    g = _csr_group()
+    hot = {"a": (2, 9), "b": (1,)}
+    plan = ap.plan_for_group(g, shards=2, hot_rows=hot)
+    seg = np.array([0, 0, 1, 3, 4, 4, 5, 6], np.int64)
+    idxs = np.array([9, 2, 5, 0, 6, 1, 3, 4], np.int64)
+    vals = np.arange(8, dtype=np.float32)
+    routed = plan.route_csr(_group_inputs(g, seg, idxs, vals))
+    # idx 9 and 2 of member a, idx 1 of member b are hot
+    assert routed["hot_nnz"] == 3 and routed["cold_nnz"] == 5
+    # every hot lookup resolves into the slab address range of its slot
+    slab_lo = min(s.hot_base for s in plan.slots if s.hot_rows)
+    n_hot = 0
+    for o in range(2):
+        lo, hi = routed["bounds"][o], routed["bounds"][o + 1]
+        n_hot += int((routed["idxs"][lo:hi] >= slab_lo).sum())
+    assert n_hot == 3
+    # round-robin assignment balances hot lookups across shards
+    assert routed["nnz"].sum() == 8
+
+
+def test_route_csr_all_hot_batch():
+    g = _csr_group()
+    plan = ap.plan_for_group(g, shards=2,
+                             hot_rows={"a": tuple(range(10)),
+                                       "b": tuple(range(7))})
+    seg = np.array([0, 1, 4, 5], np.int64)
+    idxs = np.array([3, 8, 2, 6], np.int64)
+    routed = plan.route_csr(_group_inputs(g, seg, idxs))
+    assert routed["cold_nnz"] == 0 and routed["hot_nnz"] == 4
+    # round-robin: both shards serve half the batch
+    assert routed["nnz"].tolist() == [2, 2]
 
 
 def test_route_csr_empty_stream_and_empty_shard():
     g = _csr_group()
-    lay = sp.build_layout(g, shards=2)
-    routed = sp.route_csr(lay, 7, np.zeros(0, np.int64),
-                          np.zeros(0, np.int64), np.ones(0, np.int64))
+    plan = ap.plan_for_group(g, shards=2)
+    empty = _group_inputs(g, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    routed = plan.route_csr(empty)
     assert routed["nnz"].tolist() == [0, 0]
     assert routed["cap"] == 1 and routed["max_lookups"] == 1
+    assert routed["hot_nnz"] == 0 and routed["cold_nnz"] == 0
     # all indices owned by shard 0 -> shard 1 empty but still a valid CSR
     seg = np.zeros(3, np.int64)
     idxs = np.array([0, 1, 2], np.int64)
-    routed = sp.route_csr(lay, 7, seg, idxs, np.full(3, 5, np.int64))
+    routed = plan.route_csr(_group_inputs(g, seg, idxs))
     assert routed["nnz"].tolist() == [3, 0]
     assert (routed["ptrs"][1] == 0).all()
 
 
 def test_exchange_capacity_buckets():
-    # pow-2 nnz bucket over the shard max; quarter-octave max_lookups
+    # pow-2 nnz bucket over the shard max; quarter-octave max_lookups —
+    # the canonical policy of repro.core.capacity, re-exported by kernels
+    from repro.core import capacity
+    assert capacity.exchange_capacity is exchange_capacity  # ONE definition
     assert exchange_capacity([5, 3], [2, 9]) == (8, 12)
     assert exchange_capacity([0, 0], [0, 0]) == (1, 1)
     assert exchange_capacity([100, 1], [40, 1]) == (128, 48)
+
+
+def test_hot_classification_from_traces():
+    from repro.data.locality import classify_hot
+    trace = np.array([5, 1, 5, 5, 2, 1, 9], np.int64)
+    # row 5 reused twice, row 1 once, rows 2/9 never -> head = {5, 1}
+    assert classify_hot(trace, 10, max_hot=2).tolist() == [1, 5]
+    assert classify_hot(trace, 10, max_hot=1).tolist() == [5]
+    assert classify_hot(np.arange(6), 10, max_hot=4).tolist() == []
+    prog = EmbeddingProgram("p", (
+        ("a", EmbeddingOp("sls", 4, 10, 8, avg_lookups=3)),))
+    budget = cost_model.FusionBudget(shards=2, hot_slab_bytes=2 * 8 * 4)
+    hot = ap.hot_rows_from_traces(prog, {"a": trace}, budget)
+    assert hot == {"a": (1, 5)}
+    assert ap.hot_rows_from_traces(
+        prog, {"a": trace}, cost_model.FusionBudget(shards=2)) == {}
 
 
 # ---------------------------------------------------------------------------
@@ -189,11 +311,13 @@ def test_size_one_mesh_is_single_device_path():
         np.testing.assert_array_equal(np.asarray(got_p[n]),
                                       np.asarray(got_m[n]))
     assert ex_plain.stats == ex_mesh.stats
-    # executor_for canonicalizes the 1-wide mesh to the replicated key
+    # executor_for canonicalizes the 1-wide mesh to the replicated key;
+    # hot_rows are dropped on the single-device path (nothing to exchange)
     clear_executor_cache()
     e1 = executor_for(prog, "O3", vlen=4)
     e2 = executor_for(prog, "O3", vlen=4, mesh=mesh)
-    assert e2 is e1
+    e3 = executor_for(prog, "O3", vlen=4, mesh=mesh, hot_rows={"a": (0, 1)})
+    assert e2 is e1 and e3 is e1
     clear_executor_cache()
 
 
@@ -283,6 +407,98 @@ def test_sharded_executor_two_devices():
                 np.testing.assert_allclose(np.asarray(got[n]), w,
                                            rtol=1e-5, atol=1e-5,
                                            err_msg=f"{n} {backend} max")
+
+        # hot/cold sharding end-to-end: classified Zipf head replicated,
+        # numerics identical, hot lookups measurably skip the exchange
+        from repro.core import access_plan as apm
+        progh = EmbeddingProgram("hot", (
+            ("a", EmbeddingOp("sls", 6, 32, 8, avg_lookups=4)),
+            ("b", EmbeddingOp("sls", 5, 24, 8, avg_lookups=3)),
+        ))
+        insh = make_program_inputs(progh, seed=2, alpha=1.2)
+        traces = {n: np.asarray(insh[n]["idxs"]) for n in ("a", "b")}
+        budget_h = cost_model.FusionBudget(shards=2,
+                                           hot_slab_bytes=8 * 8 * 4)
+        hot = apm.hot_rows_from_traces(progh, traces, budget_h)
+        assert hot, "Zipf trace must classify a hot head"
+        for backend in ("jax", "pallas"):
+            presh = compile_program(progh, "O3", vlen=4, use_cache=False,
+                                    budget=budget_h, hot_rows=hot)
+            exh = ProgramExecutor(presh, backend=backend, mesh=mesh,
+                                  hot_rows=hot)
+            got = exh.step(insh)
+            for n, w in program_reference(progh, insh).items():
+                np.testing.assert_allclose(np.asarray(got[n]), w,
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{n} {backend} hot")
+            assert exh.stats["hot_lookups"] > 0
+            aps = exh.access_plan_stats()
+            assert aps["hot_rows"] > 0 and aps["hot_slab_bytes"] > 0
+            # vs the interleaved executor on the SAME step: fewer routed
+            # bytes, identical outputs
+            exi = ProgramExecutor(compile_program(progh, "O3", vlen=4,
+                                                  use_cache=False),
+                                  backend=backend, mesh=mesh)
+            goti = exi.step(insh)
+            for n in got:
+                np.testing.assert_allclose(np.asarray(got[n]),
+                                           np.asarray(goti[n]),
+                                           rtol=1e-5, atol=1e-5)
+            assert exh.stats["exchange_index_bytes"] < \
+                exi.stats["exchange_index_bytes"]
+
+            # batch entirely in the hot slab: zero exchange for the step
+            all_hot = {n: dict(insh[n]) for n in insh}
+            for n, ids in hot.items():
+                pool = np.asarray(ids)
+                take = all_hot[n]["idxs"]
+                all_hot[n]["idxs"] = pool[
+                    np.arange(len(take)) % len(pool)].astype(take.dtype)
+            before = exh.stats["exchange_index_bytes"]
+            goth = exh.step(all_hot)
+            assert exh.stats["exchange_index_bytes"] == before, \
+                "all-hot batch must not route any index"
+            for n, w in program_reference(progh, all_hot).items():
+                np.testing.assert_allclose(np.asarray(goth[n]), w,
+                                           rtol=1e-5, atol=1e-5)
+
+            # empty step: zero-nnz CSR on every member is a valid no-op
+            empty = {n: dict(insh[n]) for n in insh}
+            for n in empty:
+                empty[n]["ptrs"] = np.zeros_like(empty[n]["ptrs"])
+                empty[n]["idxs"] = empty[n]["idxs"][:0]
+            gote = exh.step(empty)
+            for n, w in program_reference(progh, empty).items():
+                np.testing.assert_allclose(np.asarray(gote[n]), w,
+                                           rtol=1e-5, atol=1e-5)
+
+        # max semiring + hot slab, batch entirely COLD: the pmax merge must
+        # keep identity/zero conventions exact when the slab sees no traffic
+        progm = EmbeddingProgram("maxcold", (
+            ("a", EmbeddingOp("sls", 4, 16, 8, avg_lookups=3,
+                              semiring=Semiring("max"))),
+            ("m", EmbeddingOp("kg", 4, 16, 8, semiring=Semiring("max"))),
+        ))
+        hotm = {"a": (0, 1, 2, 3), "m": (0, 1)}
+        insm = make_program_inputs(progm, seed=4)
+        for n in ("a", "m"):   # batch entirely cold: rows 4.. only
+            insm[n]["idxs"] = 4 + (np.asarray(insm[n]["idxs"]) % 12)
+        for backend in ("jax", "pallas"):
+            presm = compile_program(
+                progm, "O3", vlen=4, use_cache=False,
+                budget=cost_model.FusionBudget(shards=2,
+                                               hot_slab_bytes=4 * 8 * 4),
+                hot_rows=hotm)
+            assert presm.units[0].fused
+            exm = ProgramExecutor(presm, backend=backend, mesh=mesh,
+                                  hot_rows=hotm)
+            gotm = exm.step(insm)
+            for n, w in program_reference(progm, insm).items():
+                np.testing.assert_allclose(np.asarray(gotm[n]), w,
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{n} {backend} maxcold")
+            assert exm.stats["hot_lookups"] == 0
+            assert exm.stats["cold_lookups"] > 0
 
         # sharded update_tables: device-side re-stack of the sharded layout
         prog3 = EmbeddingProgram("upd", (
