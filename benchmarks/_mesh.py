@@ -1,0 +1,60 @@
+"""Forced multi-device CPU mesh plumbing shared by the sharded benches and
+the 2-device tests.
+
+Three callers used to hand-roll the same two tricks (``bench_sharded``,
+``bench_locality``, ``tests/test_sharded_executor.py``):
+
+* **respawn, don't mutate** — forcing
+  ``--xla_force_host_platform_device_count`` only works before jax is
+  imported, and writing it into ``os.environ`` leaks into every later jax
+  import of the calling process (a harness running several benchmarks
+  would silently see fake devices).  :func:`respawn_with_devices` re-execs
+  the current script in a child whose *copied* environment carries the
+  flag; :func:`forced_device_env` is the reusable environment builder.
+* **skip, don't fail** — a host whose environment cannot honor the forced
+  count (flag already pinned, non-CPU platform) should report and skip.
+  Children verify with :func:`require_devices` and print
+  ``MESH_SKIP <have> <want>`` so the parent can tell "environment can't"
+  from "code broke" (``tests/conftest.py`` turns it into a pytest skip).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+MESH_SKIP = "MESH_SKIP"
+
+
+def forced_device_env(n: int, base: dict = None) -> dict:
+    """A copy of ``base`` (default ``os.environ``) whose ``XLA_FLAGS``
+    forces an ``n``-device CPU platform — for a *child* process only; the
+    caller's environment is never touched."""
+    env = dict(os.environ if base is None else base)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n} {flags}".strip()
+    return env
+
+
+def respawn_with_devices(n: int) -> int:
+    """Run this script again in a child process with an n-device CPU
+    platform forced via its (copied) environment; returns the exit code.
+    The forced ``XLA_FLAGS`` / device count never leak into the calling
+    process's environment or its later jax import."""
+    return subprocess.run(
+        [sys.executable, sys.argv[0], *sys.argv[1:], "--no-respawn"],
+        env=forced_device_env(n)).returncode
+
+
+def require_devices(n: int) -> bool:
+    """In a (re)spawned child: do we actually see ``n`` devices?  Prints
+    the ``MESH_SKIP`` sentinel when the forced count was not honored so
+    the parent can skip instead of fail."""
+    import jax
+    have = len(jax.devices())
+    if have < n:
+        print(f"{MESH_SKIP} {have} {n}", flush=True)
+        return False
+    return True

@@ -24,8 +24,12 @@ measured + estimated exchange bytes, and the hot-slab audit into
 
 On a single-device host ``main()`` re-execs itself in a subprocess with a
 forced 2-device CPU platform (the env mutation never touches this
-process — see ``bench_sharded.respawn_with_devices``).  Under
-``benchmarks/run.py`` a 1-device host skips with a report line.
+process — see ``benchmarks/_mesh.respawn_with_devices``, shared with
+``bench_sharded`` and the 2-device tests).  Under ``benchmarks/run.py``
+a 1-device host skips with a report line.  The executors run the default
+(collective) exchange; the recorded ``exchange_index_bytes`` are the
+*wire* volume of the all_to_all send lattice — hot lookups sit on its
+diagonal, which is exactly why the hot/cold reduction shows up there.
 """
 from __future__ import annotations
 
@@ -42,9 +46,9 @@ HOT_ROW_FRACTION = 8       # hot slab budget = rows/8 per table
 
 def _respawn(devices: int) -> int:
     try:
-        from .bench_sharded import respawn_with_devices
+        from ._mesh import respawn_with_devices
     except ImportError:
-        from bench_sharded import respawn_with_devices
+        from _mesh import respawn_with_devices
     return respawn_with_devices(devices)
 
 
@@ -172,10 +176,14 @@ def run_variants(fast: bool, n_steps: int) -> dict:
     for u in hotx._units:
         if u.group is None:
             continue
+        # the executors run the collective exchange with reduce-scattered
+        # outputs (the >=2-shard default), so estimate that link model —
+        # keeps exchange_bytes_est comparable to the measured counters
         res = cost_model.fused_plan_resources(
             u.group.member_ops, vlen=hotx.compiled.vlen, shards=shards,
             hot_rows_total=u.plan.hot_rows_total,
-            hot_traffic_fraction=hot_frac)
+            hot_traffic_fraction=hot_frac,
+            replicate_outputs=False, collective=True)
         audit.append({
             "members": list(u.unit.names),
             "hot_rows": u.plan.hot_rows_total,

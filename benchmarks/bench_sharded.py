@@ -1,58 +1,53 @@
-"""Replicated vs vocab-sharded fused programs: the PR-3 sharding ablation.
+"""Replicated vs vocab-sharded fused programs: the sharding + exchange
+ablation.
 
 The serving-shape LM/MoE embedding program of ``bench_steady_state`` runs
-through the steady-state executor two ways on a multi-device mesh:
+through the steady-state executor three ways on a multi-device mesh:
 
-    replicated      ProgramExecutor without a mesh — every device would hold
-                    the full fused stacked tables (PR-2 behavior)
-    vocab_sharded   stacked tables partitioned over the mesh's ``model``
-                    axis; the host routes each step's CSR streams to their
-                    owning shards (indices out) and the batched kernel runs
-                    under shard_map with pooled partial rows combined back
+    replicated       ProgramExecutor without a mesh — every device would
+                     hold the full fused stacked tables (PR-2 behavior)
+    sharded_host     stacked tables partitioned over the mesh's ``model``
+                     axis; the host routes each step's CSR streams to their
+                     owning shards (indices out as a per-owner sharded
+                     device_put) and partial pools psum back (PR-3/4)
+    sharded_collective  the same layout, but the index exchange runs as a
+                     ``jax.lax.all_to_all`` inside the shard_map body (ONE
+                     resident send buffer per step) and the pooled outputs
+                     are reduce-scattered — each shard keeps its own
+                     segment slice (``--exchange`` ablation, PR-5)
 
-Records µs/step for both (cached + overlapped), the per-device
+Records µs/step (cached + collective-overlapped), the per-device
 stacked-table footprint (the point of sharding: ÷ shard count), the
-partitioner's per-shard VMEM audit, and the measured exchange volume into
-``BENCH_sharded.json``.  Asserts the sharded outputs match the replicated
-executor (atol 1e-5), the footprint actually halves on 2 shards, and the
-overlap-vs-cached ordering holds on the sharded path too.
+partitioner's per-shard VMEM audit, the measured exchange volume, and the
+per-mode host-sync counts into ``BENCH_sharded.json``.  Asserts all
+sharded outputs match the replicated executor (atol 1e-5), the footprint
+actually halves on 2 shards, the collective path issues FEWER host syncs
+per step than the host exchange, its reduce-scattered output bytes are
+≤ replicated/shards + padding, and the overlap-vs-cached ordering holds.
 
-On a single-device host, ``main()`` re-execs itself in a *subprocess* whose
-environment forces a 2-device CPU mesh
-(``--xla_force_host_platform_device_count``) — the mutation never touches
-this process's ``os.environ``, so importing jax later in the same process
-(e.g. a harness running several benchmarks) keeps seeing the real device
-count.  Under ``benchmarks/run.py`` (jax already imported) a 1-device host
-skips with a report line.
+On a single-device host, ``main()`` re-execs itself in a *subprocess*
+whose environment forces a 2-device CPU mesh (``benchmarks/_mesh.py`` —
+the mutation never touches this process's ``os.environ``, so importing
+jax later in the same process keeps seeing the real device count).  Under
+``benchmarks/run.py`` (jax already imported) a 1-device host skips with a
+report line.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
-import subprocess
 import sys
 from pathlib import Path
+
+try:
+    from ._mesh import respawn_with_devices
+except ImportError:                      # run as a plain script
+    from _mesh import respawn_with_devices
 
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_sharded.json"
 
 
-def respawn_with_devices(n: int) -> int:
-    """Run this script again in a child process with an n-device CPU
-    platform forced via its (copied) environment; returns the exit code.
-    The forced ``XLA_FLAGS`` / device count never leak into the calling
-    process's environment or its later jax import."""
-    env = dict(os.environ)
-    flags = env.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in flags:
-        env["XLA_FLAGS"] = \
-            f"--xla_force_host_platform_device_count={n} {flags}".strip()
-    return subprocess.run(
-        [sys.executable, sys.argv[0], *sys.argv[1:], "--no-respawn"],
-        env=env).returncode
-
-
-def run_variants(fast: bool, n_steps: int) -> dict:
+def run_variants(fast: bool, n_steps: int, exchange: str = "both") -> dict:
     import jax
     import numpy as np
 
@@ -79,59 +74,95 @@ def run_variants(fast: bool, n_steps: int) -> dict:
     repl = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
                            backend="jax")
     budget = cost_model.FusionBudget(shards=shards)
-    shrd = ProgramExecutor(
-        compile_program(prog, "O3", use_cache=False, budget=budget),
-        backend="jax", mesh=mesh)
+    pres = compile_program(prog, "O3", use_cache=False, budget=budget)
+    shrd_host = ProgramExecutor(pres, backend="jax", mesh=mesh,
+                                exchange="host")
+    shrd_coll = ProgramExecutor(pres, backend="jax", mesh=mesh,
+                                exchange="collective")
+    # the overlap pipeline only runs (and is only worth compiling) when
+    # the collective variants are timed
     shrd_async = ProgramExecutor(
         compile_program(prog, "O3", use_cache=False, budget=budget),
-        backend="jax", mesh=mesh, depth=2)
+        backend="jax", mesh=mesh, exchange="collective", depth=2) \
+        if exchange in ("collective", "both") else None
 
-    # numeric identity: vocab-sharded pooling must reproduce the
-    # single-device executor exactly (modulo f32 reassociation)
+    # numeric identity: both exchange modes must reproduce the
+    # single-device executor exactly (modulo f32 reassociation) — the
+    # --exchange=collective acceptance gate
     want = repl.step(steps[0])
-    got = shrd.step(steps[0])
+    got_h = shrd_host.step(steps[0])
+    got_c = shrd_coll.step(steps[0])
     for n in want:
-        np.testing.assert_allclose(np.asarray(got[n]), np.asarray(want[n]),
+        np.testing.assert_allclose(np.asarray(got_h[n]),
+                                   np.asarray(want[n]),
                                    rtol=1e-5, atol=1e-5,
-                                   err_msg=f"sharded {n} diverged")
+                                   err_msg=f"sharded-host {n} diverged")
+        np.testing.assert_allclose(np.asarray(got_c[n]),
+                                   np.asarray(want[n]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"collective {n} diverged")
+
+    def fused_units(ex):
+        return [u for u in ex._units if u.group is not None]
+
+    # collective wins, measured on the SAME step: fewer host syncs (one
+    # resident send buffer per CSR unit instead of ptrs+idxs+vals
+    # scatters) and reduce-scattered output bytes ≤ replicated/S + padding
+    syncs_host = shrd_host.stats["host_syncs"]
+    syncs_coll = shrd_coll.stats["host_syncs"]
+    assert syncs_coll < syncs_host, \
+        (f"collective exchange must issue fewer host syncs per step: "
+         f"{syncs_coll} vs {syncs_host}")
+    rs_pad = sum(
+        (u.plan.padded_segments - u.plan.num_segments)
+        * (u.plan.op.block_rows if u.plan.op.kind == "gather" else 1)
+        * u.plan.op.emb_len * 4 * (shards - 1) // shards
+        for u in fused_units(shrd_coll))
+    assert shrd_coll.stats["exchange_row_bytes"] <= \
+        shrd_host.stats["exchange_row_bytes"] // shards + rs_pad, \
+        (f"reduce-scattered output bytes exceed replicated/S + padding: "
+         f"{shrd_coll.stats['exchange_row_bytes']} vs "
+         f"{shrd_host.stats['exchange_row_bytes']} / {shards} + {rs_pad}")
 
     # interleaved best-of-N (see bench_steady_state._time_variants): slow
     # machine-load drift hits all variants equally, so the overlap/cached
     # comparison is stable enough to assert on.  The 2-fake-device CPU
     # collectives are much noisier than single-device dispatch, so the
-    # sharded ablation takes extra rounds for the minima to converge.
-    out = bss._time_variants({
-        "replicated_cached": lambda b: [repl.step(i) for i in b],
-        "sharded_cached": lambda b: [shrd.step(i) for i in b],
-        "sharded_overlap": lambda b: shrd_async.run_steps(b),
-    }, steps, repeats=5)
+    # sharded ablation takes extra rounds for the minima to converge (the
+    # in-body all_to_all adds its own jitter on the fake mesh: 8 rounds).
+    variants = {"replicated_cached": lambda b: [repl.step(i) for i in b]}
+    if exchange in ("host", "both"):
+        variants["sharded_host"] = lambda b: [shrd_host.step(i) for i in b]
+    if exchange in ("collective", "both"):
+        variants["sharded_collective"] = \
+            lambda b: [shrd_coll.step(i) for i in b]
+        variants["sharded_overlap"] = lambda b: shrd_async.run_steps(b)
+    out = bss._time_variants(variants, steps, repeats=8)
     # overlap must not regress on the sharded path either.  On the forced
     # CPU mesh two in-flight cross-device collectives contend for the same
     # host threads, so overlap ≈ cached within collective jitter is the
     # steady state here (the genuine overlap win — 1.8× — is measured on
     # the single-device path by bench_steady_state, which asserts the tight
     # 5% bound); anything past jitter is a pipeline regression.
-    assert out["sharded_overlap"] <= out["sharded_cached"] * 1.15, \
-        (f"sharded overlap regressed: {out['sharded_overlap']:.1f}us vs "
-         f"cached {out['sharded_cached']:.1f}us")
+    if "sharded_overlap" in out:
+        assert out["sharded_overlap"] <= out["sharded_collective"] * 1.15, \
+            (f"sharded overlap regressed: {out['sharded_overlap']:.1f}us "
+             f"vs cached {out['sharded_collective']:.1f}us")
 
     # footprints: what ONE device holds of the fused stacked tables
-    def fused_units(ex):
-        return [u for u in ex._units if u.group is not None]
-
     repl_dev = sum(int(u.table.nbytes) for u in fused_units(repl))
     shrd_dev = sum(int(u.table.addressable_shards[0].data.nbytes)
-                   for u in fused_units(shrd))
+                   for u in fused_units(shrd_coll))
     assert shrd_dev <= repl_dev // shards + 4096, \
         (f"sharding did not divide the footprint: {shrd_dev} vs "
          f"{repl_dev} / {shards}")
 
     # partitioner audit, per shard count — the per-shard VMEM budget view
     audit = []
-    for u in fused_units(shrd):
-        res = cost_model.fused_plan_resources(u.group.member_ops,
-                                              vlen=shrd.compiled.vlen,
-                                              shards=shards)
+    for u in fused_units(shrd_coll):
+        res = cost_model.fused_plan_resources(
+            u.group.member_ops, vlen=shrd_coll.compiled.vlen,
+            shards=shards, replicate_outputs=False)
         assert res["vmem_bytes"] <= budget.vmem_bytes, \
             f"fused group {u.unit.names} exceeds the per-shard VMEM budget"
         audit.append({
@@ -142,42 +173,63 @@ def run_variants(fast: bool, n_steps: int) -> dict:
             "exchange_bytes_per_step": int(res["exchange_bytes"]),
         })
 
-    steps_run = shrd.stats["steps"]       # counters below are shrd's only
+    def exchange_record(ex):
+        n = max(ex.stats["steps"], 1)
+        return {
+            "steps": ex.stats["steps"],
+            "host_syncs_per_step": round(ex.stats["host_syncs"] / n, 2),
+            "index_bytes_per_step": ex.stats["exchange_index_bytes"] // n,
+            "row_bytes_per_step": ex.stats["exchange_row_bytes"] // n,
+            "replicate_outputs": ex.replicate_outputs,
+        }
+
+    steps_run = shrd_coll.stats["steps"]  # counters below are collective's
     return {
         "config": {"fast": fast, "steps": n_steps, "backend": "jax",
                    "shards": shards, "ops": len(prog.ops),
-                   "fused_units": len(fused_units(shrd))},
+                   "exchange": exchange,
+                   "fused_units": len(fused_units(shrd_coll))},
         "us_per_step": {k: round(v, 1) for k, v in out.items()},
         "sharded_vs_replicated": round(
-            out["replicated_cached"] / out["sharded_cached"], 3),
+            out["replicated_cached"] /
+            out.get("sharded_collective", out.get("sharded_host")), 3),
         "overlap_vs_cached": round(
-            out["sharded_cached"] / out["sharded_overlap"], 3),
+            out["sharded_collective"] / out["sharded_overlap"], 3)
+        if "sharded_overlap" in out else None,
         "per_device_table_bytes": {"replicated": repl_dev,
                                    "vocab_sharded": shrd_dev,
                                    "ratio": round(shrd_dev / repl_dev, 3)},
         "exchange_measured": {
             "index_bytes_per_step":
-                shrd.stats["exchange_index_bytes"] // max(steps_run, 1),
+                shrd_coll.stats["exchange_index_bytes"]
+                // max(steps_run, 1),
             "row_bytes_per_step":
-                shrd.stats["exchange_row_bytes"] // max(steps_run, 1),
+                shrd_coll.stats["exchange_row_bytes"] // max(steps_run, 1),
         },
-        "executor_stats": dict(shrd_async.stats),
+        "exchange_ablation": {"host": exchange_record(shrd_host),
+                              "collective": exchange_record(shrd_coll)},
+        "executor_stats": dict(shrd_async.stats)
+        if shrd_async is not None else None,
+        "access_plans": shrd_coll.access_plan_stats(),
         "partitioner": {"budget_vmem_bytes": budget.vmem_bytes,
                         "shards": shards, "groups": audit},
     }
 
 
 def run(report, fast: bool = True, n_steps: int = 3,
-        out_path: Path = DEFAULT_OUT) -> dict:
+        out_path: Path = DEFAULT_OUT, exchange: str = "both") -> dict:
     import jax
     if len(jax.devices()) < 2:
         report("sharded/skipped", 0, "needs >= 2 devices")
         return {}
-    rec = run_variants(fast, n_steps)
+    rec = run_variants(fast, n_steps, exchange)
     for k, v in rec["us_per_step"].items():
         report(f"sharded/{k}_us", v, rec["config"]["shards"])
     report("sharded/per_device_table_ratio", 0,
            rec["per_device_table_bytes"]["ratio"])
+    report("sharded/host_syncs_per_step", 0, "host %.1f collective %.1f" % (
+        rec["exchange_ablation"]["host"]["host_syncs_per_step"],
+        rec["exchange_ablation"]["collective"]["host_syncs_per_step"]))
     out_path.write_text(json.dumps(rec, indent=2))
     report("sharded/json", 0, str(out_path))
     return rec
@@ -188,6 +240,12 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smoke sizes (tier1.sh --fast)")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--exchange", choices=("host", "collective", "both"),
+                    default="both",
+                    help="which sharded exchange mode(s) to time; the "
+                         "host/collective cross-checks (numeric identity, "
+                         "host-sync and output-byte comparisons) always "
+                         "run both once")
     ap.add_argument("--devices", type=int, default=2,
                     help="forced CPU device count (default 2); applied in "
                          "a respawned child process, never this one")
@@ -203,12 +261,19 @@ def main() -> None:
     def report(name, us, derived):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
-    rec = run(report, fast=args.fast, n_steps=n, out_path=args.out)
+    rec = run(report, fast=args.fast, n_steps=n, out_path=args.out,
+              exchange=args.exchange)
     if rec:
         pd = rec["per_device_table_bytes"]
+        ab = rec["exchange_ablation"]
         print(f"vocab sharding: per-device stacked tables "
               f"{pd['replicated']} -> {pd['vocab_sharded']} bytes "
               f"({pd['ratio']:.2f}x) on {rec['config']['shards']} shards")
+        print(f"collective exchange: host syncs/step "
+              f"{ab['host']['host_syncs_per_step']} -> "
+              f"{ab['collective']['host_syncs_per_step']}, pooled-row "
+              f"bytes/step {ab['host']['row_bytes_per_step']} -> "
+              f"{ab['collective']['row_bytes_per_step']} (reduce-scatter)")
 
 
 if __name__ == "__main__":

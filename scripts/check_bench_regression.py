@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Fail CI when a freshly-measured BENCH_*.json regresses its exchange
+bytes vs. the committed baseline by more than 10%.
+
+The tier1 workflow refreshes the ``BENCH_*.json`` records in the workspace
+(``scripts/tier1.sh --fast``); this script diffs the *byte-counted*
+exchange metrics — deterministic layout/routing products, unlike the
+noisy µs timings — against the versions committed at HEAD (``git show``).
+A metric missing on either side is reported and skipped (new benches and
+schema growth are not regressions), as is a record whose benchmark
+``config`` differs from the baseline's (byte counts are only comparable
+within one workload); a >10% increase in any tracked metric exits
+non-zero.
+
+The workflow passes the PR's merge base (``origin/<base branch>``) or, on
+push, ``HEAD^`` as the baseline ref — never the commit under test, which
+could carry its own regressed records.  An unresolvable ref degrades to
+all-skip (first push of a branch), not a failure.
+
+    python scripts/check_bench_regression.py [--baseline-ref HEAD]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: (file, dotted metric path) — every tracked metric counts exchanged
+#: bytes per step; lower is better, +10% fails.
+METRICS = (
+    ("BENCH_sharded.json", "exchange_measured.index_bytes_per_step"),
+    ("BENCH_sharded.json", "exchange_measured.row_bytes_per_step"),
+    ("BENCH_sharded.json",
+     "exchange_ablation.collective.index_bytes_per_step"),
+    ("BENCH_sharded.json",
+     "exchange_ablation.collective.row_bytes_per_step"),
+    ("BENCH_locality.json", "exchange_index_bytes_per_step.hot_cold"),
+)
+
+TOLERANCE = 0.10
+
+
+def dig(record: dict, path: str):
+    cur = record
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def baseline_json(ref: str, name: str):
+    try:
+        out = subprocess.run(["git", "show", f"{ref}:{name}"],
+                             capture_output=True, text=True, cwd=REPO,
+                             check=True).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baseline records")
+    args = ap.parse_args()
+
+    failures = []
+    config_ok: dict = {}
+    for name, path in METRICS:
+        fresh_path = REPO / name
+        if not fresh_path.exists():
+            print(f"SKIP {name}:{path} (no fresh record)")
+            continue
+        fresh_rec = json.loads(fresh_path.read_text())
+        base_rec = baseline_json(args.baseline_ref, name)
+        # byte counts are only comparable between runs of the same
+        # workload: a baseline committed from a full-size run must not
+        # silently gate (or trip on) a --fast measurement
+        if name not in config_ok:
+            fresh_cfg = (fresh_rec or {}).get("config")
+            base_cfg = (base_rec or {}).get("config")
+            config_ok[name] = fresh_cfg == base_cfg
+            if not config_ok[name]:
+                print(f"SKIP {name} (configs differ: fresh={fresh_cfg} "
+                      f"baseline={base_cfg})")
+        if not config_ok[name]:
+            continue
+        fresh = dig(fresh_rec, path)
+        base = dig(base_rec, path) if base_rec else None
+        if fresh is None or base is None:
+            print(f"SKIP {name}:{path} (metric absent: "
+                  f"fresh={fresh} baseline={base})")
+            continue
+        limit = base * (1 + TOLERANCE)
+        status = "FAIL" if fresh > limit else "ok"
+        print(f"{status:4} {name}:{path}  baseline={base}  fresh={fresh}  "
+              f"limit={limit:.0f}")
+        if fresh > limit:
+            failures.append((name, path, base, fresh))
+    if failures:
+        print(f"\n{len(failures)} exchange-bytes regression(s) > "
+              f"{TOLERANCE:.0%} vs {args.baseline_ref}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification entrypoint (the ROADMAP command, with PYTHONPATH set).
 #
-#   scripts/tier1.sh            # exactly the ROADMAP tier-1 run
+#   scripts/tier1.sh            # exactly the ROADMAP tier-1 run (full
+#                               # differential sweep: >=200 generated cases)
 #   scripts/tier1.sh --fast     # + no cacheprovider (clean CI workspaces)
+#                               # + differential smoke subset (pytest --fast)
 #                               # + steady-state executor bench smoke run
 #   scripts/tier1.sh [pytest args...]   # extra args forwarded to pytest
 set -euo pipefail
@@ -13,7 +15,9 @@ FAST=0
 EXTRA=()
 if [[ "${1:-}" == "--fast" ]]; then
   FAST=1
-  EXTRA+=(-p no:cacheprovider)
+  # --fast (tests/conftest.py) gates the generated differential cases to a
+  # smoke subset, the same way this script gates the benches below
+  EXTRA+=(-p no:cacheprovider --fast)
   shift
 fi
 python -m pytest -x -q "${EXTRA[@]}" "$@"
@@ -25,9 +29,10 @@ if [[ "$FAST" == 1 ]]; then
   python benchmarks/bench_steady_state.py --fast
   # vocab-sharded smoke (the bench respawns itself in a subprocess with a
   # forced 2-device CPU mesh — no env leak into this shell): asserts
-  # sharded numerics == replicated and the per-device footprint halving,
-  # refreshes BENCH_sharded.json
-  python benchmarks/bench_sharded.py --fast
+  # sharded numerics == replicated for BOTH exchange modes, fewer host
+  # syncs + reduce-scattered output bytes on the collective path, and the
+  # per-device footprint halving, refreshes BENCH_sharded.json
+  python benchmarks/bench_sharded.py --fast --exchange=both
   # locality-aware hot/cold sharding smoke (same respawn pattern): asserts
   # outputs identical to the interleaved PR-3 path AND >= 2x less routed
   # exchange volume on the Zipf stream, refreshes BENCH_locality.json

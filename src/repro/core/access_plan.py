@@ -152,6 +152,20 @@ class AccessPlan:
         return sum(s.hot_rows for s in self.slots)
 
     @property
+    def seg_cap(self) -> int:
+        """Contiguous segment-slice size of the collective exchange layout:
+        shard ``s`` *originates* fused segments ``[s·seg_cap, (s+1)·seg_cap)``
+        (its slice of the batch — the multi-host arrival model) and, with
+        reduce-scattered outputs, *owns* their pooled rows."""
+        return -(-self.num_segments // self.shards)
+
+    @property
+    def padded_segments(self) -> int:
+        """Fused output rows after padding to the reduce-scatter grid
+        (``seg_cap · shards``); rows ``>= num_segments`` are never read."""
+        return self.seg_cap * self.shards
+
+    @property
     def hot_slab_bytes(self) -> int:
         """Bytes of replicated hot rows each shard carries (0 when cold-only)."""
         item = np.dtype(self.op.dtype).itemsize
@@ -301,12 +315,16 @@ class AccessPlan:
     # Sharded routing (the offset-stream exchange, step 1)
     # ------------------------------------------------------------------
 
-    def _resolve(self, idxs: np.ndarray, slot: SlotPlan, rr: int) -> tuple:
+    def _resolve(self, idxs: np.ndarray, slot: SlotPlan, rr: int,
+                 hot_owner: Optional[np.ndarray] = None) -> tuple:
         """Per-lookup (owner shard, fully-rebased local index, #hot) of one
         member's index stream.  Hot rows are local everywhere, so their
         owner is a load-balancing choice — round-robin in stream order
-        (``rr`` threads the counter across members) — and they contribute
-        no exchange; cold rows route to ``cold_rank // C_t``."""
+        (``rr`` threads the counter across members), or, on the collective
+        path, the per-lookup ``hot_owner`` (the *source* shard: a hot
+        lookup is then served where it arrives and never hits the wire) —
+        and they contribute no exchange; cold rows route to
+        ``cold_rank // C_t``."""
         idxs = np.asarray(idxs, np.int64)
         if slot.remap is None or not slot.hot_rows:
             owner = idxs // slot.cap
@@ -317,10 +335,14 @@ class AccessPlan:
         owner = np.empty(len(idxs), np.int64)
         cold = ~hot
         owner[cold] = r[cold] // slot.cap
-        owner[hot] = (rr + np.arange(nh, dtype=np.int64)) % self.shards
+        if hot_owner is not None:
+            owner[hot] = np.asarray(hot_owner, np.int64)[hot]
+        else:
+            owner[hot] = (rr + np.arange(nh, dtype=np.int64)) % self.shards
+            rr += nh
         local = np.where(hot, slot.hot_base + r,
                          slot.cold_base + r - owner * slot.cap)
-        return owner, local, nh, rr + nh
+        return owner, local, nh, rr
 
     def route_csr(self, inputs: dict) -> dict:
         """Bucket one step's fused CSR stream by owning shard: merge the
@@ -396,6 +418,161 @@ class AccessPlan:
         return {"idxs": idxs_out, "mask": mask,
                 "hot_segments": hot_segments,
                 "cold_segments": B - hot_segments}
+
+    # ------------------------------------------------------------------
+    # Collective routing (the offset-stream exchange as all_to_all send
+    # buffers — see docs/executor.md §Collective exchange)
+    # ------------------------------------------------------------------
+
+    def fill_lattice(self, routed: dict, ints: np.ndarray,
+                     vals: Optional[np.ndarray] = None) -> None:
+        """Scatter a collective routing's per-lookup streams into the
+        ``(S_src, S_dst, 2, cap)`` send lattice IN PLACE (the executor's
+        rotating scratch — the steady-state path allocates nothing per
+        step).  Pad slots get the segment sentinel; packing is stable
+        within each pair, so per-pair runs stay segment-ordered."""
+        s = self.shards
+        cap = ints.shape[-1]
+        ints[:, :, 0, :] = self.num_segments      # pad sentinel
+        ints[:, :, 1, :] = 0                      # pad rows stay in bounds
+        if vals is not None:
+            vals[:] = 0
+        seg = routed["seg"]
+        n = len(seg)
+        if not n:
+            return
+        flat = routed["src"] * s + routed["owner"]
+        perm = np.argsort(flat, kind="stable")
+        sflat = flat[perm]
+        bounds = np.zeros(s * s + 1, np.int64)
+        np.cumsum(np.bincount(sflat, minlength=s * s), out=bounds[1:])
+        within = np.arange(n, dtype=np.int64) - bounds[sflat]
+        i3 = ints.reshape(s * s, 2, cap)
+        i3[sflat, 0, within] = seg[perm].astype(np.int32)
+        i3[sflat, 1, within] = routed["local"][perm].astype(np.int32)
+        if vals is not None:
+            vals.reshape(s * s, cap)[sflat, within] = routed["val"][perm]
+
+    def packed_lattice(self, routed: dict) -> dict:
+        """Fresh-array packing of a collective routing (tests and one-shot
+        callers; the executor fills its scratch via :meth:`fill_lattice`)."""
+        s, cap = self.shards, routed["cap"]
+        ints = np.empty((s, s, 2, cap), np.int32)
+        vals = (np.empty((s, s, cap), np.dtype(self.op.dtype))
+                if routed.get("val") is not None else None)
+        self.fill_lattice(routed, ints, vals)
+        return {"ints": ints, "vals": vals}
+
+    def route_csr_collective(self, inputs: dict) -> dict:
+        """Bucket one step's fused CSR stream into the ``(src, dst)`` send
+        lattice of the device-collective exchange (``jax.lax.all_to_all``
+        inside the shard_map body — see :mod:`repro.core.shard_plan`).
+
+        The *source* shard of a lookup is the contiguous segment slice its
+        fused segment falls in (``seg // seg_cap``) — the shard that, in a
+        multi-host deployment, generates that slice of the batch and (with
+        reduce-scattered outputs) owns its pooled rows.  Hot lookups are
+        served **at the source** (the slab is local on every shard), so
+        they occupy the diagonal of the send lattice and never hit the
+        wire; cold lookups route to ``cold_rank // C_t`` as always.  Every
+        pair bucket pads to ONE capacity (the lattice bucket of the max
+        pair count) so the ``all_to_all`` is retrace-free across ragged
+        steps; pad slots carry the segment sentinel ``num_segments``
+        (masked on device), and the per-lookup *segment id* travels with
+        the index, so the receiving shard can rebuild a canonical CSR
+        without any cross-pair host merge.  ``wire_nnz`` counts the
+        off-diagonal (actually exchanged) lookups.
+
+        Returns the resolved streams + capacities; pack them into a send
+        buffer with :meth:`fill_lattice` (in-place, the executor's scratch)
+        or :meth:`packed_lattice` (fresh arrays)."""
+        s = self.shards
+        sc = self.seg_cap
+        parts, nnz, _ = self.csr_parts(inputs)
+        segs_l, srcs_l, owners_l, locals_l, vals_l = [], [], [], [], []
+        hot_nnz = 0
+        for m, p, n in parts:
+            ins = inputs[m.name]
+            seg = np.repeat(
+                np.arange(m.num_segments, dtype=np.int64) + m.seg_offset,
+                np.diff(p))
+            src = np.minimum(seg // sc, s - 1)
+            owner, local, nh, _ = self._resolve(
+                ins["idxs"], self.slots[m.slot], 0, hot_owner=src)
+            hot_nnz += nh
+            segs_l.append(seg)
+            srcs_l.append(src)
+            owners_l.append(owner)
+            locals_l.append(local)
+            if self.need_vals:
+                v = ins.get("vals")
+                vals_l.append(np.full(n, self.unit_weight,
+                                      np.dtype(self.op.dtype))
+                              if v is None else np.asarray(v))
+        cat = (lambda xs, dt: np.concatenate(xs)
+               if xs else np.zeros(0, dt))
+        seg = cat(segs_l, np.int64)
+        src = cat(srcs_l, np.int64)
+        owner = cat(owners_l, np.int64)
+        local = cat(locals_l, np.int64)
+        pair = np.zeros((s, s), np.int64)
+        dst_seg = np.zeros((s, self.num_segments), np.int64)
+        if len(seg):
+            np.add.at(pair, (src, owner), 1)
+            np.add.at(dst_seg, (owner, seg), 1)
+        cap, ml = self.lattice.collective_exchange_capacity(
+            pair, dst_seg.max(axis=1, initial=0))
+        return {
+            "seg": seg,
+            "src": src,
+            "owner": owner,
+            "local": local,
+            "val": (cat(vals_l, np.dtype(self.op.dtype))
+                    if self.need_vals else None),
+            "cap": cap,
+            "max_lookups": ml,
+            "pair_counts": pair,
+            "nnz": pair.sum(axis=0),
+            "hot_nnz": hot_nnz,
+            "cold_nnz": nnz - hot_nnz,
+            "wire_nnz": int(pair.sum() - np.trace(pair)),
+        }
+
+    def route_gather_collective(self, inputs: dict) -> dict:
+        """Collective routing of a fused gather's one-index-per-segment
+        stream: same ``(src, dst)`` send lattice as the CSR path (segment
+        id + local block index per lookup); the receiving shard gathers its
+        owned blocks and scatters them to their segments — exactly one
+        shard owns each segment, so the cross-shard combine is a plain sum
+        (or its reduce-scatter).  Pack via :meth:`fill_lattice` /
+        :meth:`packed_lattice`, like the CSR routing."""
+        s, sc, B = self.shards, self.seg_cap, self.num_segments
+        segs_l, srcs_l, owners_l, locals_l = [], [], [], []
+        hot_segments = 0
+        for m in self.members:
+            seg = np.arange(m.num_segments, dtype=np.int64) + m.seg_offset
+            src = np.minimum(seg // sc, s - 1)
+            owner, local, nh, _ = self._resolve(
+                inputs[m.name]["idxs"], self.slots[m.slot], 0,
+                hot_owner=src)
+            hot_segments += nh
+            segs_l.append(seg)
+            srcs_l.append(src)
+            owners_l.append(owner)
+            locals_l.append(local)
+        seg = np.concatenate(segs_l)
+        src = np.concatenate(srcs_l)
+        owner = np.concatenate(owners_l)
+        local = np.concatenate(locals_l)
+        pair = np.zeros((s, s), np.int64)
+        np.add.at(pair, (src, owner), 1)
+        cap, _ = self.lattice.collective_exchange_capacity(pair, [0])
+        return {"seg": seg, "src": src, "owner": owner, "local": local,
+                "val": None, "cap": cap,
+                "pair_counts": pair,
+                "hot_segments": hot_segments,
+                "cold_segments": B - hot_segments,
+                "wire_segments": int(pair.sum() - np.trace(pair))}
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 def lookup_capacity(n: int) -> int:
     """Round a ragged extent up to its power-of-two capacity bucket (>= 1).
@@ -56,6 +58,19 @@ def exchange_capacity(nnz_per_shard, max_seg_per_shard) -> tuple:
     return lookup_capacity(nnz), grid_capacity(seg)
 
 
+def collective_exchange_capacity(pair_counts, max_seg_per_shard) -> tuple:
+    """Joint ``(pair_cap, max_lookups)`` bucket of one device-collective
+    exchange step: every ``(src, dst)`` send bucket of the ``all_to_all``
+    must have the SAME static width (the collective splits uniformly), so
+    the bucket is the max over all shard pairs, rounded with the same pow-2
+    rule as the single-device nnz streams; ``max_lookups`` stays the
+    quarter-octave grid bucket over the *receiving* shards' densest
+    segment.  An all-empty step still gets the >=1-slot bucket."""
+    pair = max((int(n) for n in np.ravel(pair_counts)), default=0)
+    seg = max((int(n) for n in max_seg_per_shard), default=0)
+    return lookup_capacity(pair), grid_capacity(seg)
+
+
 @dataclasses.dataclass(frozen=True)
 class CapacityLattice:
     """The bucketing policy as a value, carried by every AccessPlan.
@@ -72,6 +87,10 @@ class CapacityLattice:
 
     def exchange_capacity(self, nnz_per_shard, max_seg_per_shard) -> tuple:
         return exchange_capacity(nnz_per_shard, max_seg_per_shard)
+
+    def collective_exchange_capacity(self, pair_counts,
+                                     max_seg_per_shard) -> tuple:
+        return collective_exchange_capacity(pair_counts, max_seg_per_shard)
 
 
 DEFAULT_LATTICE = CapacityLattice()

@@ -283,17 +283,26 @@ def table_bytes(op: EmbeddingOp, shards: int = 1) -> int:
 
 
 def exchange_bytes(ops, shards: int = 1,
-                   hot_traffic_fraction: float = 0.0) -> dict:
+                   hot_traffic_fraction: float = 0.0,
+                   replicate_outputs: bool = True,
+                   collective: bool = False) -> dict:
     """Per-step exchange-volume estimate of running ``ops`` as one fused
     unit vocab-sharded over ``shards``: indices out (each lookup's index —
     and its vals word in an upcast group — lands on its owning shard;
-    (S-1)/S of them are remote) and pooled rows back (the psum/pmax ring of
-    the (B, E) partial pools: each shard ships its partials S-1 hops).
+    (S-1)/S of them are remote, the collective link model: diagonal traffic
+    of the all_to_all send lattice never crosses a link) and pooled rows
+    back.  With ``replicate_outputs`` the (B, E) partial pools all-reduce
+    (each shard ships its partials S-1 hops); reduce-scattered outputs
+    (``replicate_outputs=False``) ship only (S-1)/S of the
+    segment-padded pools — the replicated volume ÷ S, plus the padding
+    rows of the scatter grid.
 
     ``hot_traffic_fraction`` is the share of lookups the replicated hot
     slab absorbs (hot rows are local on every shard — zero index exchange);
     ``index_savings_bytes`` reports what the classification saved vs. the
-    all-interleaved layout."""
+    all-interleaved layout.  ``collective`` adds the fused-segment-id word
+    every lookup of the all_to_all send lattice carries (the receiver
+    rebuilds its sub-CSR from it), matching the executor's wire counter."""
     ops = list(ops)
     if shards <= 1:
         return {"index_bytes": 0, "row_bytes": 0, "total_bytes": 0,
@@ -301,9 +310,26 @@ def exchange_bytes(ops, shards: int = 1,
     h = min(max(float(hot_traffic_fraction), 0.0), 1.0)
     lookups = sum(expected_lookups(op) for op in ops)
     words = 2 if group_needs_vals(ops) else 1
+    if collective:
+        words += 1                       # the per-lookup segment id
     idx_all = int(lookups * words * 4 * (shards - 1) / shards)
     idx = int(idx_all * (1.0 - h))
-    rows = sum(op.num_segments * op.emb_len for op in ops) * 4 * (shards - 1)
+
+    def out_width(op):                   # bytes per output segment row
+        blk = op.block_rows if op.kind == "gather" else 1
+        return blk * op.emb_len * 4
+
+    if replicate_outputs:
+        rows = sum(op.num_segments * out_width(op) for op in ops) \
+            * (shards - 1)
+    else:
+        segs = sum(op.num_segments for op in ops)
+        pad = -(-segs // shards) * shards - segs
+        # per-op widths summed like the replicate branch (a fused group is
+        # width-homogeneous, but the helper is public); pad rows take the
+        # group width of ops[0]
+        rows = (sum(op.num_segments * out_width(op) for op in ops)
+                + pad * out_width(ops[0])) * (shards - 1) // shards
     return {"index_bytes": idx, "row_bytes": rows,
             "total_bytes": idx + rows,
             "index_savings_bytes": idx_all - idx}
@@ -313,7 +339,9 @@ def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
                          num_buffers: int = 2,
                          m: Machine = DEFAULT, shards: int = 1,
                          hot_rows_total: int = 0,
-                         hot_traffic_fraction: float = 0.0) -> dict:
+                         hot_traffic_fraction: float = 0.0,
+                         replicate_outputs: bool = True,
+                         collective: bool = False) -> dict:
     """Resource estimate of compiling ``ops`` as ONE batched KernelPlan.
 
     Returns vmem_bytes (tiles + scalar operands — PER SHARD when
@@ -343,7 +371,9 @@ def fused_plan_resources(ops, vlen: int = 128, lvl: int = 3,
     blk = op0.block_rows if op0.kind == "gather" else 1
     hot_slab = (int(hot_rows_total) * blk * op0.emb_len
                 * np.dtype(op0.dtype).itemsize if shards > 1 else 0)
-    exch = exchange_bytes(ops, shards, hot_traffic_fraction)
+    exch = exchange_bytes(ops, shards, hot_traffic_fraction,
+                          replicate_outputs=replicate_outputs,
+                          collective=collective)
     return {
         "vmem_bytes": tiles + operands,
         "tile_bytes": tiles,

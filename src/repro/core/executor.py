@@ -43,8 +43,14 @@ CSR streams are routed to their owning shards by the host interpreting the
 plan (the access unit doing the offset-stream exchange, padded to the same
 pow-2/quarter-octave capacity buckets so the exchange is retrace-free; hot
 lookups stay local and pay no exchange), and the batched SLS kernel runs
-under ``shard_map`` (:mod:`repro.core.shard_plan` owns the device bodies);
-pooled partial rows combine with ``psum``/``pmax``.  A mesh of size 1 (or
+under ``shard_map`` (:mod:`repro.core.shard_plan` owns the device bodies).
+With ``exchange="collective"`` (the ≥2-shard default) the routed buckets
+become the *send lattice* of a ``jax.lax.all_to_all`` executed inside the
+shard_map body — one resident send buffer per step instead of per-shard
+host scatters — and pooled outputs are **reduce-scattered** over the mesh
+(each shard owns a contiguous segment slice; ``replicate_outputs=True`` is
+the escape hatch back to the fully-replicated ``psum``/``pmax`` combine,
+which is also the ``exchange="host"`` default).  A mesh of size 1 (or
 ``mesh=None``) takes exactly the single-device path.
 """
 from __future__ import annotations
@@ -155,7 +161,9 @@ class ProgramExecutor:
     def __init__(self, compiled: ProgramCompileResult,
                  interpret: Optional[bool] = None, depth: int = 2,
                  backend: str = "pallas", mesh=None,
-                 shard_axis: str = "model", hot_rows=None):
+                 shard_axis: str = "model", hot_rows=None,
+                 exchange: Optional[str] = None,
+                 replicate_outputs: Optional[bool] = None):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
         self.compiled = compiled
@@ -167,6 +175,21 @@ class ProgramExecutor:
         # a 1-wide mesh IS the single-device executor (bit-identical path)
         self.mesh = mesh if self.shards > 1 else None
         self.shard_axis = shard_axis
+        # exchange mode of the sharded offset streams: "collective" (the
+        # default on >=2 shards) ships ONE resident send buffer per step and
+        # runs the index exchange as jax.lax.all_to_all inside the shard_map
+        # body; "host" is the PR-3/4 single-controller routed scatter.
+        assert exchange in (None, "host", "collective"), exchange
+        self.exchange = ("host" if self.shards == 1
+                         else (exchange or "collective"))
+        # pooled outputs: reduce-scattered over the mesh (each shard owns
+        # its contiguous segment slice — the default with the collective
+        # exchange) or fully replicated via psum/pmax (the escape hatch,
+        # and the host-exchange default for PR-4 compatibility).
+        if replicate_outputs is None:
+            replicate_outputs = self.exchange == "host"
+        self.replicate_outputs = bool(replicate_outputs) \
+            if self.shards > 1 else True
         # hot/cold vocab classification ({op name: replicated row ids});
         # only meaningful on sharded executors — see core/access_plan.py
         self.hot_rows = dict(hot_rows) if (hot_rows and self.shards > 1) \
@@ -184,7 +207,8 @@ class ProgramExecutor:
                       "table_rebinds": 0, "marshal_hits": 0,
                       "marshal_misses": 0, "max_inflight": 0,
                       "exchange_index_bytes": 0, "exchange_row_bytes": 0,
-                      "hot_lookups": 0, "cold_lookups": 0}
+                      "hot_lookups": 0, "cold_lookups": 0,
+                      "host_syncs": 0}
 
     def _plan_for(self, u: _UnitState) -> ap.AccessPlan:
         """The unit's AccessPlan: the compiled artifact when it matches this
@@ -369,11 +393,17 @@ class ProgramExecutor:
             return ins, ml
         buf["idxs"][nnz:cap] = 0          # pad rows must stay in bounds
         dev = {"table": u.table, "roff": u.roff,
-               "ptrs": jax.device_put(buf["ptrs"]),
-               "idxs": jax.device_put(buf["idxs"])}
+               "ptrs": self._put(buf["ptrs"]),
+               "idxs": self._put(buf["idxs"])}
         if need_vals:
-            dev["vals"] = jax.device_put(buf["vals"])
+            dev["vals"] = self._put(buf["vals"])
         return dev, ml
+
+    def _put(self, arr) -> jax.Array:
+        """Host→device transfer of one per-step operand, counted in
+        ``host_syncs`` (the executor's per-step transfer-issue stat)."""
+        self.stats["host_syncs"] += 1
+        return jax.device_put(arr)
 
     def _marshal_gather(self, idx: int, u: _UnitState, inputs: dict):
         plan = u.plan
@@ -384,47 +414,82 @@ class ProgramExecutor:
             return {"table": u.table, "roff": plan.roff,
                     "idxs": buf["idxs"]}, None
         return {"table": u.table, "roff": u.roff,
-                "idxs": jax.device_put(buf["idxs"])}, None
+                "idxs": self._put(buf["idxs"])}, None
 
     # ------------------------------------------------------------------
     # Sharded fused units: host-routed offset-stream exchange + shard_map
     # ------------------------------------------------------------------
 
+    def _put_sharded(self, arr) -> jax.Array:
+        """Leading-dim-sharded placement of one per-step operand buffer,
+        counted as a host sync (a host→device transfer the device pipeline
+        must wait on — the collective exchange's whole point is issuing
+        fewer of these per step)."""
+        self.stats["host_syncs"] += 1
+        return sp.put_sharded(arr, self.mesh, self.shard_axis)
+
     def _shard_fn(self, idx: int, u: _UnitState, bucket: tuple):
         """Memoized jit(shard_map) callable per (unit, capacity bucket) —
-        the sharded analogue of the per-bucket kernel trace."""
+        the sharded analogue of the per-bucket kernel trace.  The exchange
+        mode and output placement are executor-level constants, so they
+        need no key component."""
         key = (idx, bucket)
         fn = self._shard_fns.get(key)
         if fn is not None:
             return fn
         op = u.group.op
+        plan = u.plan
+        collective = self.exchange == "collective"
+        repl = self.replicate_outputs
+        axis = self.shard_axis
+        kw = dict(axis=axis, backend=self.backend, replicate=repl,
+                  shards=self.shards, seg_cap=plan.seg_cap)
         if op.kind == "gather":
-            body = sp.make_gather_body(op, axis=self.shard_axis,
-                                       backend=self.backend,
-                                       interpret=self.interpret)
-            fn = sp.sharded_call(body, self.mesh, self.shard_axis,
-                                 n_bucketed=2, out_ndim=3)
+            make = (sp.make_gather_collective_body if collective
+                    else sp.make_gather_body)
+            body = make(op, interpret=self.interpret, **kw)
+            fn = sp.sharded_call(
+                body, self.mesh, axis,
+                sp.gather_in_specs(axis, collective=collective),
+                sp.pooled_out_specs(axis, 3, replicate=repl))
         else:
             kind, cap, ml, need_vals = bucket
-            plan = bp.make_plan(u.res)
-            col_tile = plan.col_tile if plan.whole_row_dma else 128
-            body = sp.make_csr_body(op, axis=self.shard_axis,
-                                    backend=self.backend, max_lookups=ml,
-                                    need_vals=need_vals,
-                                    interpret=self.interpret,
-                                    col_tile=col_tile)
-            fn = sp.sharded_call(body, self.mesh, self.shard_axis,
-                                 n_bucketed=3 if need_vals else 2,
-                                 out_ndim=2)
+            kplan = bp.make_plan(u.res)
+            col_tile = kplan.col_tile if kplan.whole_row_dma else 128
+            make = (sp.make_csr_collective_body if collective
+                    else sp.make_csr_body)
+            body = make(op, max_lookups=ml, need_vals=need_vals,
+                        interpret=self.interpret, col_tile=col_tile, **kw)
+            fn = sp.sharded_call(
+                body, self.mesh, axis,
+                sp.csr_in_specs(axis, collective=collective,
+                                need_vals=need_vals),
+                sp.pooled_out_specs(axis, 2, replicate=repl))
         self._shard_fns[key] = fn
         return fn
 
+    def _count_row_bytes(self, op, blk: int, plan) -> None:
+        """Pooled-rows-back volume of one sharded step: the replicated
+        psum/pmax ships every shard's partials everywhere ((S-1)·B·E·4);
+        the reduce-scatter leaves each shard only its own segment slice —
+        1/S of that, plus the padding rows of the scatter grid."""
+        s = self.shards
+        width = blk * op.emb_len * 4
+        if self.replicate_outputs:
+            self.stats["exchange_row_bytes"] += \
+                op.num_segments * width * (s - 1)
+        else:
+            self.stats["exchange_row_bytes"] += \
+                plan.padded_segments * width * (s - 1) // s
+
     def _run_csr_sharded(self, idx: int, u: _UnitState, inputs: dict):
-        """Fused CSR unit over S vocab shards: the AccessPlan merges the
-        member streams and routes every lookup to its owning shard (indices
-        out — hot rows resolve to the replicated slab and pay no exchange),
-        then the batched kernel runs per shard under shard_map and the
-        partial pools combine (pooled rows back)."""
+        """Fused CSR unit over S vocab shards, host exchange: the
+        AccessPlan merges the member streams and routes every lookup to its
+        owning shard (indices out — hot rows resolve to the replicated slab
+        and pay no exchange), then the batched kernel runs per shard under
+        shard_map and the partial pools combine (pooled rows back)."""
+        if self.exchange == "collective":
+            return self._run_csr_collective(idx, u, inputs)
         plan = u.plan
         op = plan.op
         need_vals = plan.need_vals
@@ -450,14 +515,44 @@ class ProgramExecutor:
             routed["cold_nnz"] * (8 if need_vals else 4)
         self.stats["hot_lookups"] += routed["hot_nnz"]
         self.stats["cold_lookups"] += routed["cold_nnz"]
-        self.stats["exchange_row_bytes"] += \
-            op.num_segments * op.emb_len * 4 * (s - 1)
-        args = [u.table, u.roff,
-                sp.put_sharded(buf["ptrs"], self.mesh, self.shard_axis),
-                sp.put_sharded(buf["idxs"], self.mesh, self.shard_axis)]
+        self._count_row_bytes(op, 1, plan)
+        args = [u.table, u.roff, self._put_sharded(buf["ptrs"]),
+                self._put_sharded(buf["idxs"])]
         if need_vals:
-            args.append(sp.put_sharded(buf["vals"], self.mesh,
-                                       self.shard_axis))
+            args.append(self._put_sharded(buf["vals"]))
+        fn = self._shard_fn(idx, u, ("csr", cap, ml, need_vals))
+        return fn(*args)
+
+    def _run_csr_collective(self, idx: int, u: _UnitState, inputs: dict):
+        """Fused CSR unit over S vocab shards, collective exchange: the
+        AccessPlan packs the step into the (src, dst) send lattice — ONE
+        resident send buffer (plus its vals twin when weighted) is
+        device_put per step — and the index exchange itself runs as
+        ``jax.lax.all_to_all`` inside the shard_map body (hot lookups sit
+        on the diagonal: zero wire traffic)."""
+        plan = u.plan
+        op = plan.op
+        need_vals = plan.need_vals
+        routed = plan.route_csr_collective(inputs)
+        s, cap, ml = self.shards, routed["cap"], routed["max_lookups"]
+        spec = {"ints": ((s, s, 2, cap), np.int32)}
+        if need_vals:
+            spec["vals"] = ((s, s, cap), np.dtype(op.dtype))
+        buf = self._scratch_for(idx, ("coll", cap, ml), spec)
+        plan.fill_lattice(routed, buf["ints"],
+                          buf["vals"] if need_vals else None)
+        # wire volume: only off-diagonal (src != owner) lookups actually
+        # cross a link in the all_to_all; hot lookups are always diagonal.
+        # Each wire lookup carries its segment id + local index (+ val):
+        # 8 (12 weighted) bytes — matching the gather path's seg+idx count
+        self.stats["exchange_index_bytes"] += \
+            routed["wire_nnz"] * (12 if need_vals else 8)
+        self.stats["hot_lookups"] += routed["hot_nnz"]
+        self.stats["cold_lookups"] += routed["cold_nnz"]
+        self._count_row_bytes(op, 1, plan)
+        args = [u.table, u.roff, self._put_sharded(buf["ints"])]
+        if need_vals:
+            args.append(self._put_sharded(buf["vals"]))
         fn = self._shard_fn(idx, u, ("csr", cap, ml, need_vals))
         return fn(*args)
 
@@ -465,22 +560,34 @@ class ProgramExecutor:
         plan = u.plan
         n = plan.num_segments
         blk = plan.op.block_rows
-        routed = plan.route_gather(inputs)
         s = self.shards
-        spec = {"idxs": ((s, n), np.int32), "mask": ((s, n), np.float32)}
-        buf = self._scratch_for(idx, ("gather",), spec)
-        buf["idxs"][:] = routed["idxs"]
-        buf["mask"][:] = routed["mask"]
-        self.stats["exchange_index_bytes"] += \
-            routed["cold_segments"] * 8   # idx + mask word
+        if self.exchange == "collective":
+            routed = plan.route_gather_collective(inputs)
+            cap = routed["cap"]
+            spec = {"ints": ((s, s, 2, cap), np.int32)}
+            buf = self._scratch_for(idx, ("gather-coll", cap), spec)
+            plan.fill_lattice(routed, buf["ints"])
+            self.stats["exchange_index_bytes"] += \
+                routed["wire_segments"] * 8   # seg + idx word
+            args = [u.table, u.roff, self._put_sharded(buf["ints"])]
+            bucket = ("gather-coll", cap)
+        else:
+            routed = plan.route_gather(inputs)
+            spec = {"idxs": ((s, n), np.int32),
+                    "mask": ((s, n), np.float32)}
+            buf = self._scratch_for(idx, ("gather",), spec)
+            buf["idxs"][:] = routed["idxs"]
+            buf["mask"][:] = routed["mask"]
+            self.stats["exchange_index_bytes"] += \
+                routed["cold_segments"] * 8   # idx + mask word
+            args = [u.table, u.roff, self._put_sharded(buf["idxs"]),
+                    self._put_sharded(buf["mask"])]
+            bucket = ("gather",)
         self.stats["hot_lookups"] += routed["hot_segments"]
         self.stats["cold_lookups"] += routed["cold_segments"]
-        self.stats["exchange_row_bytes"] += n * blk * plan.op.emb_len * 4 \
-            * (s - 1)
-        fn = self._shard_fn(idx, u, ("gather",))
-        return fn(u.table, u.roff,
-                  sp.put_sharded(buf["idxs"], self.mesh, self.shard_axis),
-                  sp.put_sharded(buf["mask"], self.mesh, self.shard_axis))
+        self._count_row_bytes(plan.op, blk, plan)
+        fn = self._shard_fn(idx, u, bucket)
+        return fn(*args)
 
     def _marshal_single(self, idx: int, u: _UnitState, inputs: dict):
         """Singleton unit: device-transfer the per-step operands, bucketing
@@ -490,11 +597,11 @@ class ProgramExecutor:
         ins = inputs[name]
         if op.kind == "gather":
             return {"table": u.table,
-                    "idxs": jax.device_put(np.asarray(ins["idxs"]))}, None
+                    "idxs": self._put(np.asarray(ins["idxs"]))}, None
         if op.kind == "kg":
             return {"table": u.table,
-                    "idxs": jax.device_put(np.asarray(ins["idxs"])),
-                    "vals": jax.device_put(np.asarray(ins["vals"]))}, 1
+                    "idxs": self._put(np.asarray(ins["idxs"])),
+                    "vals": self._put(np.asarray(ins["vals"]))}, 1
         if op.index_format == "lengths" and "ptrs" not in ins:
             ptrs = np.zeros(op.num_segments + 1, np.int64)
             np.cumsum(ins["lens"], out=ptrs[1:])
@@ -513,11 +620,11 @@ class ProgramExecutor:
         buf["ptrs"][:] = ptrs
         buf["idxs"][:nnz] = ins["idxs"]
         buf["idxs"][nnz:cap] = 0
-        dev = {key: u.table, "ptrs": jax.device_put(buf["ptrs"]),
-               "idxs": jax.device_put(buf["idxs"])}
+        dev = {key: u.table, "ptrs": self._put(buf["ptrs"]),
+               "idxs": self._put(buf["idxs"])}
         if need_vals:
             buf["vals"][:nnz] = ins["vals"]
-            dev["vals"] = jax.device_put(buf["vals"])
+            dev["vals"] = self._put(buf["vals"])
         return dev, ml
 
     # ------------------------------------------------------------------
@@ -610,15 +717,25 @@ class ProgramExecutor:
         plan-build time the ``plan-access`` pass recorded."""
         fused = [u for u in self._units if u.group is not None]
         steps = self.stats["steps"]
-        est_idx = sum(
-            cost_model.exchange_bytes(u.group.member_ops,
-                                      self.shards)["index_bytes"]
-            for u in fused) * steps
+        est = [cost_model.exchange_bytes(
+                   u.group.member_ops, self.shards,
+                   replicate_outputs=self.replicate_outputs,
+                   collective=self.exchange == "collective")
+               for u in fused]
+        est_idx = sum(e["index_bytes"] for e in est) * steps
         hot = self.stats["hot_lookups"]
         cold = self.stats["cold_lookups"]
         total = hot + cold
         return {
             "shards": self.shards,
+            "exchange": self.exchange,
+            "replicate_outputs": self.replicate_outputs,
+            "host_syncs": self.stats["host_syncs"],
+            "host_syncs_per_step": round(
+                self.stats["host_syncs"] / steps, 2) if steps else 0.0,
+            "exchange_row_bytes": self.stats["exchange_row_bytes"],
+            "exchange_row_bytes_est": sum(e["row_bytes"]
+                                          for e in est) * steps,
             "units": len(self._units),
             "fused_units": len(fused),
             "hot_rows": sum(u.plan.hot_rows_total for u in fused),
@@ -651,7 +768,9 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  budget: Optional[FusionBudget] = None,
                  depth: int = 2, backend: str = "pallas",
                  mesh=None, shard_axis: str = "model",
-                 hot_rows=None) -> ProgramExecutor:
+                 hot_rows=None, exchange: Optional[str] = None,
+                 replicate_outputs: Optional[bool] = None
+                 ) -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -673,20 +792,34 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     locality-aware hot/cold sharding: the classified Zipf head of each
     vocab is replicated on every shard (local lookups, zero exchange) while
     the tail stays interleave-sharded.  Ignored on the single-device path;
-    part of both cache keys."""
+    part of both cache keys.
+
+    ``exchange`` selects how the routed offset streams move on a ≥2-shard
+    mesh: ``"collective"`` (the default) marshals one resident send buffer
+    per step and runs the index exchange as ``jax.lax.all_to_all`` inside
+    the shard_map body; ``"host"`` is the PR-3/4 single-controller routed
+    scatter.  ``replicate_outputs`` picks the pooled-output placement:
+    reduce-scattered segment slices (collective default) or fully
+    replicated via psum/pmax (host default, and the escape hatch)."""
     # canonicalize defaults so explicit-default calls hit the same entry
     interpret = kops.default_interpret() if interpret is None else interpret
     shards = sp.shard_count(mesh, shard_axis)
     if shards == 1:
         mesh = None
         hot_rows = None
+        exchange = "host"
+        replicate_outputs = True
+    else:
+        exchange = exchange or "collective"
+        if replicate_outputs is None:
+            replicate_outputs = exchange == "host"
     budget = budget or FusionBudget()
     if budget.shards != shards:
         budget = dataclasses.replace(budget, shards=shards)
     hot_spec = ap.canonical_hot(hot_rows)
     key = (program.signature(), opt_level, vlen, interpret, budget, depth,
            backend, mesh, shard_axis if mesh is not None else None,
-           hot_spec)
+           hot_spec, exchange, bool(replicate_outputs))
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
@@ -694,7 +827,8 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                                hot_rows=hot_rows)
     ex = ProgramExecutor(compiled, interpret=interpret, depth=depth,
                          backend=backend, mesh=mesh, shard_axis=shard_axis,
-                         hot_rows=hot_rows)
+                         hot_rows=hot_rows, exchange=exchange,
+                         replicate_outputs=replicate_outputs)
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 

@@ -13,31 +13,43 @@ This module only *realizes* a plan on a mesh:
 
 * :func:`shard_stack_tables` materializes the plan's per-shard local tables
   (cold slices + replicated hot slabs) as one row-sharded global array;
-* :func:`put_sharded` / :func:`put_replicated` place the routed ``(S, …)``
-  exchange buckets (the single-controller stand-in for the indices-out
-  ``all_to_all``);
-* ``make_csr_body`` / ``make_gather_body`` / :func:`sharded_call` build the
-  ``jit(shard_map(...))`` execute bodies: local pool + pooled-rows-back
-  combine (``psum``/``pmax``/``pmin`` with ⊕-identity-exact empty-segment
-  handling).
+* :func:`put_sharded` / :func:`put_replicated` place the per-step operand
+  buffers: the host-exchange ``(S_dst, …)`` routed buckets, or the
+  collective path's ``(S_src, …)`` resident send lattice;
+* ``make_csr_body`` / ``make_gather_body`` (host exchange) and
+  ``make_csr_collective_body`` / ``make_gather_collective_body``
+  (device-collective exchange) + :func:`sharded_call` build the
+  ``jit(shard_map(...))`` execute bodies: optional on-device
+  ``all_to_all`` index exchange, local pool, then pooled-rows-back combine
+  — fully replicated (``psum``/``pmax``/``pmin``) or **reduce-scattered**
+  so each shard keeps only its contiguous segment slice — with
+  ⊕-identity-exact empty-segment handling throughout.
 
 Exchange protocol (per step, the access side doing the all-to-all on the
 offset stream):
 
     1. **indices out** — the host interprets the AccessPlan: every lookup
        resolves to ``(owner shard, fully-rebased local address)``; hot rows
-       are replicated so their lookups are *local* on a round-robin shard
-       (zero exchange), cold rows route to ``cold_rank // C_t``.  Buckets
-       are padded to the plan's capacity lattice, so the exchange is
-       retrace-free across ragged steps.
+       are replicated so their lookups are *local* (round-robin on the host
+       exchange; served at the *source* shard — zero wire traffic — on the
+       collective), cold rows route to ``cold_rank // C_t``.  Buckets are
+       padded to the plan's capacity lattice, so the exchange is
+       retrace-free across ragged steps.  ``exchange="host"`` realizes the
+       move as a single-controller sharded ``device_put`` of per-owner
+       buckets; ``exchange="collective"`` device_puts ONE ``(S_src, S_dst,
+       …)`` send lattice and runs ``jax.lax.all_to_all`` *inside* the
+       shard_map body (each lookup travels with its fused segment id, so
+       the receiver rebuilds a canonical sub-CSR without host help).
     2. **local pool** — each shard runs the batched SLS kernel (or the XLA
        reference body) over its local sub-CSR; since routed indices arrive
        fully rebased, the kernel's ``seg_base`` stream is all-zero here.
     3. **pooled rows back** — the partial pools combine across shards with
-       ``psum`` (⊕=add) / ``pmax`` / ``pmin``; locally-empty segments
-       contribute the ⊕-identity, and globally-empty segments are fixed to
-       0 afterwards (the SLS convention), so a shard receiving zero indices
-       for a step is a no-op, not a hazard.
+       ``psum`` (⊕=add) / ``pmax`` / ``pmin`` when replicated, or
+       reduce-scatter (``psum_scatter``; the all_to_all transpose for
+       max/min) when each shard owns a segment slice; locally-empty
+       segments contribute the ⊕-identity, and globally-empty segments are
+       fixed to 0 afterwards (the SLS convention), so a shard receiving
+       zero indices for a step is a no-op, not a hazard.
 """
 from __future__ import annotations
 
@@ -47,7 +59,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops as kops
-from ..launch.sharding import replicated_sharding, table_row_sharding
+from ..launch.sharding import (leading_axis_sharding, replicated_sharding,
+                               table_row_sharding)
 from .access_plan import AccessPlan
 from .jax_compat import shard_map
 
@@ -96,10 +109,12 @@ def shard_stack_tables(parts: list, plan: AccessPlan, mesh,
 
 
 def put_sharded(arr: np.ndarray, mesh, axis: str) -> jax.Array:
-    """Scatter a host ``(S, …)`` bucket array so shard ``s`` holds row ``s``
-    — the single-controller realization of the indices-out all-to-all."""
-    assert arr.ndim == 2, arr.shape   # all exchange buckets are (S, width)
-    return jax.device_put(arr, table_row_sharding(mesh, axis))
+    """Place a host ``(S, …)`` bucket array so shard ``s`` holds block ``s``
+    of the leading dim: the host-exchange scatter (dim 0 = *destination*
+    shard) and the collective path's resident send buffer (dim 0 = *source*
+    shard — the ``all_to_all`` moves the indices from there)."""
+    assert arr.ndim >= 2, arr.shape
+    return jax.device_put(arr, leading_axis_sharding(mesh, axis, arr.ndim))
 
 
 def put_replicated(arr, mesh) -> jax.Array:
@@ -115,6 +130,49 @@ def _combine(out, axis: str, add_op: str):
     if add_op == "add":
         return jax.lax.psum(out, axis)
     return (jax.lax.pmax if add_op == "max" else jax.lax.pmin)(out, axis)
+
+
+def _reduce_scatter(x, axis: str, add_op: str, shards: int, seg_cap: int):
+    """⊕-reduce-scatter of per-shard partial pools along dim 0: pad the
+    segment dim to the ``shards·seg_cap`` grid and leave each shard holding
+    the combined rows of its own contiguous segment slice (rows past the
+    true segment count are padding and never read).  ``psum_scatter`` is
+    the ⊕=add primitive; max/min reduce-scatter via the all_to_all
+    transpose (each shard collects every peer's partials for its slice)."""
+    pad = shards * seg_cap - x.shape[0]
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                    constant_values=_ADD_IDENT[add_op])
+    if add_op == "add":
+        return jax.lax.psum_scatter(x, axis, scatter_dimension=0,
+                                    tiled=True)
+    r = jax.lax.all_to_all(x.reshape((shards, seg_cap) + x.shape[1:]),
+                           axis, 0, 0)
+    return (jnp.max if add_op == "max" else jnp.min)(r, axis=0)
+
+
+def _finish_csr(out, counts, *, axis: str, add_op: str, replicate: bool,
+                shards: int, seg_cap: int):
+    """Cross-shard combine + SLS zero-fix of one CSR unit's partial pools.
+    ``counts`` are the shard's per-segment lookup counts (locally-empty
+    segments hold the ⊕-identity in ``out``); globally-empty segments are
+    fixed to 0 after the merge — the SLS convention — using the summed
+    counts, reduce-scattered alongside the rows when outputs are owned."""
+    if replicate:
+        merged = _combine(out, axis, add_op)
+        if add_op == "add":
+            return merged
+        total = jax.lax.psum(counts, axis)
+        return jnp.where((total > 0)[:, None], merged, 0.0)
+    merged = _reduce_scatter(out, axis, add_op, shards, seg_cap)
+    if add_op == "add":
+        return merged
+    pad = shards * seg_cap - counts.shape[0]
+    if pad:
+        counts = jnp.pad(counts, (0, pad))
+    total = jax.lax.psum_scatter(counts, axis, scatter_dimension=0,
+                                 tiled=True)
+    return jnp.where((total > 0)[:, None], merged, 0.0)
 
 
 def jnp_sls_local(table, ptrs, idxs, vals, roff, *, num_segments: int,
@@ -144,70 +202,204 @@ def jnp_sls_local(table, ptrs, idxs, vals, roff, *, num_segments: int,
     return out
 
 
+def _local_pool_csr(table, roff, ptrs, idxs, vals, *, backend: str,
+                    add_op: str, mul_op: str, nseg: int, max_lookups: int,
+                    col_tile: int, interpret: bool):
+    """One shard's partial pool over a local sub-CSR, with locally-empty
+    segments holding the ⊕-identity (merge-ready).  Returns
+    ``(out, counts)`` — counts feed the globally-empty zero-fix."""
+    counts = ptrs[1:] - ptrs[:-1]
+    if backend == "pallas":
+        out = kops.sls(table, ptrs, idxs, vals, num_segments=nseg,
+                       max_lookups=max_lookups, add_op=add_op,
+                       mul_op=mul_op, col_tile=col_tile,
+                       interpret=interpret, seg_base=roff)
+        if add_op != "add":
+            # the kernel zeroed locally-empty segments (SLS convention);
+            # restore the ⊕-identity before merging across shards
+            out = jnp.where((counts > 0)[:, None], out,
+                            jnp.asarray(_ADD_IDENT[add_op], out.dtype))
+    else:
+        out = jnp_sls_local(table, ptrs, idxs, vals, roff,
+                            num_segments=nseg, add_op=add_op,
+                            mul_op=mul_op)
+    return out, counts
+
+
 def make_csr_body(op, *, axis: str, backend: str, max_lookups: int,
-                  need_vals: bool, interpret: bool, col_tile: int):
-    """shard_map body of one fused CSR unit: local pool + pooled-rows-back
-    combine.  The bucketed operands arrive with a leading length-1 shard dim
+                  need_vals: bool, interpret: bool, col_tile: int,
+                  replicate: bool = True, shards: int = 1,
+                  seg_cap: int = 0):
+    """shard_map body of one fused CSR unit under the *host* exchange: the
+    bucketed operands arrive pre-routed with a leading length-1 shard dim
     (in_specs P(axis, …)); the table arrives as the local (L·blk, E) slice;
-    ``roff`` replicated (all-zero — routed indices arrive fully rebased)."""
+    ``roff`` replicated (all-zero — routed indices arrive fully rebased).
+    Local pool, then pooled rows back — replicated (``psum``/``pmax``) or
+    reduce-scattered to each shard's segment slice."""
     add_op, mul_op = op.semiring.add, op.semiring.mul
     nseg = op.num_segments
 
     def body(table, roff, ptrs, idxs, *maybe_vals):
-        ptrs1, idxs1 = ptrs[0], idxs[0]
-        vals1 = maybe_vals[0][0] if need_vals else None
-        if backend == "pallas":
-            out = kops.sls(table, ptrs1, idxs1, vals1, num_segments=nseg,
-                           max_lookups=max_lookups, add_op=add_op,
-                           mul_op=mul_op, col_tile=col_tile,
-                           interpret=interpret, seg_base=roff)
-            if add_op != "add":
-                # the kernel zeroed locally-empty segments (SLS convention);
-                # restore the ⊕-identity before merging across shards
-                counts = ptrs1[1:] - ptrs1[:-1]
-                out = jnp.where((counts > 0)[:, None],
-                                out, jnp.asarray(_ADD_IDENT[add_op],
-                                                 out.dtype))
-        else:
-            out = jnp_sls_local(table, ptrs1, idxs1, vals1, roff,
-                                num_segments=nseg, add_op=add_op,
-                                mul_op=mul_op)
-        merged = _combine(out, axis, add_op)
-        if add_op == "add":
-            return merged
-        total = jax.lax.psum(ptrs1[1:] - ptrs1[:-1], axis)
-        return jnp.where((total > 0)[:, None], merged, 0.0)
+        out, counts = _local_pool_csr(
+            table, roff, ptrs[0], idxs[0],
+            maybe_vals[0][0] if need_vals else None,
+            backend=backend, add_op=add_op, mul_op=mul_op, nseg=nseg,
+            max_lookups=max_lookups, col_tile=col_tile,
+            interpret=interpret)
+        return _finish_csr(out, counts, axis=axis, add_op=add_op,
+                           replicate=replicate, shards=shards,
+                           seg_cap=seg_cap)
 
     return body
 
 
-def make_gather_body(op, *, axis: str, backend: str, interpret: bool):
-    """shard_map body of one fused gather unit: masked local block-gather,
-    partial rows back via psum (exactly one shard owns each segment)."""
+def make_csr_collective_body(op, *, axis: str, backend: str,
+                             max_lookups: int, need_vals: bool,
+                             interpret: bool, col_tile: int,
+                             replicate: bool, shards: int, seg_cap: int):
+    """shard_map body of one fused CSR unit under the *collective* exchange.
+
+    The operands arrive as the resident send buffer — per shard a
+    ``(S, 2, cap)`` lattice of (segment id, local index) pairs keyed by
+    destination (plus a ``(S, cap)`` vals lattice) — and the index exchange
+    itself runs on device: ``all_to_all`` transposes the lattice so dim 0
+    becomes *received-from*.  Pad slots carry the segment sentinel
+    ``num_segments``.  The received streams rebuild a canonical local
+    sub-CSR (pallas: stable sort by segment + ``searchsorted`` offsets; the
+    kernel then runs exactly as on the host-exchange path) or feed the
+    segment-reduce directly (jax backend), and the pooled rows combine
+    replicated or reduce-scattered."""
+    add_op, mul_op = op.semiring.add, op.semiring.mul
+    nseg = op.num_segments
+
+    def body(table, roff, ints, *maybe_vals):
+        recv = jax.lax.all_to_all(ints[0], axis, 0, 0)   # dim 0: src shard
+        segs = recv[:, 0, :].reshape(-1)
+        idxs = recv[:, 1, :].reshape(-1)
+        vals = (jax.lax.all_to_all(maybe_vals[0][0], axis, 0, 0).reshape(-1)
+                if need_vals else None)
+        valid = segs < nseg
+        if backend == "pallas":
+            order = jnp.argsort(segs)          # stable; sentinels sort last
+            ptrs = jnp.searchsorted(
+                jnp.take(segs, order),
+                jnp.arange(nseg + 1, dtype=segs.dtype)).astype(jnp.int32)
+            out, counts = _local_pool_csr(
+                table, roff, ptrs, jnp.take(idxs, order),
+                jnp.take(vals, order) if need_vals else None,
+                backend=backend, add_op=add_op, mul_op=mul_op, nseg=nseg,
+                max_lookups=max_lookups, col_tile=col_tile,
+                interpret=interpret)
+        else:
+            segc = jnp.minimum(segs, nseg - 1).astype(jnp.int32)
+            rows = jnp.take(table, idxs, axis=0)
+            if need_vals:
+                w = vals[:, None].astype(rows.dtype)
+                rows = rows * w if mul_op == "mul" else rows + w
+            ident = jnp.asarray(_ADD_IDENT[add_op], rows.dtype)
+            rows = jnp.where(valid[:, None], rows, ident)
+            reduce = {"add": jax.ops.segment_sum,
+                      "max": jax.ops.segment_max,
+                      "min": jax.ops.segment_min}[add_op]
+            out = reduce(rows, segc, num_segments=nseg)
+            counts = jax.ops.segment_sum(valid.astype(jnp.int32), segc,
+                                         num_segments=nseg)
+            if add_op != "add":
+                out = jnp.where((counts > 0)[:, None], out, ident)
+        return _finish_csr(out, counts, axis=axis, add_op=add_op,
+                           replicate=replicate, shards=shards,
+                           seg_cap=seg_cap)
+
+    return body
+
+
+def make_gather_body(op, *, axis: str, backend: str, interpret: bool,
+                     replicate: bool = True, shards: int = 1,
+                     seg_cap: int = 0):
+    """shard_map body of one fused gather unit under the host exchange:
+    masked local block-gather; partial rows back via psum (exactly one
+    shard owns each segment) or reduce-scattered to the owner slices."""
     blk = op.block_rows
 
     def body(table, roff, idxs, mask):
         i = idxs[0] + roff
-        if backend == "pallas":
-            rows = kops.block_gather(table, i, block_rows=blk,
-                                     interpret=interpret)
-        else:
-            r = i[:, None] * blk + jnp.arange(blk, dtype=i.dtype)[None, :]
-            rows = jnp.take(table, r.reshape(-1), axis=0).reshape(
-                i.shape[0], blk, table.shape[-1])
+        rows = _local_block_gather(table, i, blk, backend, interpret)
         rows = rows * mask[0][:, None, None].astype(rows.dtype)
-        return jax.lax.psum(rows, axis)
+        if replicate:
+            return jax.lax.psum(rows, axis)
+        return _reduce_scatter(rows, axis, "add", shards, seg_cap)
 
     return body
 
 
-def sharded_call(body, mesh, axis: str, n_bucketed: int, out_ndim: int):
-    """jit(shard_map(body)): table row-sharded, ``roff`` replicated,
-    ``n_bucketed`` per-shard operand buckets, replicated pooled output.
-    jit makes the per-capacity-bucket trace the retrace unit, mirroring the
-    single-device executor."""
-    in_specs = (P(axis, None), P(None)) + \
-        tuple(P(axis, *(None,) * 1) for _ in range(n_bucketed))
-    out_specs = P(*(None,) * out_ndim)
-    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+def _local_block_gather(table, i, blk: int, backend: str, interpret: bool):
+    if backend == "pallas":
+        return kops.block_gather(table, i, block_rows=blk,
+                                 interpret=interpret)
+    r = i[:, None] * blk + jnp.arange(blk, dtype=i.dtype)[None, :]
+    return jnp.take(table, r.reshape(-1), axis=0).reshape(
+        i.shape[0], blk, table.shape[-1])
+
+
+def make_gather_collective_body(op, *, axis: str, backend: str,
+                                interpret: bool, replicate: bool,
+                                shards: int, seg_cap: int):
+    """Collective-exchange gather body: all_to_all the (segment, block id)
+    send lattice, block-gather the received local blocks, scatter them to
+    their segments (each segment globally owned by exactly one lookup), and
+    sum-combine — replicated or reduce-scattered."""
+    blk = op.block_rows
+    nseg = op.num_segments
+
+    def body(table, roff, ints):
+        recv = jax.lax.all_to_all(ints[0], axis, 0, 0)
+        segs = recv[:, 0, :].reshape(-1)
+        idxs = recv[:, 1, :].reshape(-1)
+        valid = segs < nseg
+        rows = _local_block_gather(table, idxs, blk, backend, interpret)
+        rows = rows * valid[:, None, None].astype(rows.dtype)
+        segc = jnp.minimum(segs, nseg - 1).astype(jnp.int32)
+        out = jax.ops.segment_sum(rows, segc, num_segments=nseg)
+        if replicate:
+            return jax.lax.psum(out, axis)
+        return _reduce_scatter(out, axis, "add", shards, seg_cap)
+
+    return body
+
+
+def sharded_call(body, mesh, axis: str, in_specs, out_specs):
+    """jit(shard_map(body)) with the caller's explicit operand/output
+    PartitionSpecs (the table is always ``P(axis, None)``, ``roff``
+    replicated, buckets/send buffers leading-dim sharded; outputs
+    replicated or — reduce-scattered — leading-dim sharded).  jit makes the
+    per-capacity-bucket trace the retrace unit, mirroring the single-device
+    executor."""
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                              out_specs=out_specs, check_vma=False))
+
+
+def csr_in_specs(axis: str, *, collective: bool, need_vals: bool) -> tuple:
+    """(table, roff, …operands) specs of a CSR unit's shard_map call."""
+    if collective:
+        ops_ = (P(axis, None, None, None),)          # ints (S, S, 2, cap)
+        if need_vals:
+            ops_ += (P(axis, None, None),)           # vals (S, S, cap)
+    else:
+        ops_ = (P(axis, None), P(axis, None))        # ptrs, idxs
+        if need_vals:
+            ops_ += (P(axis, None),)
+    return (P(axis, None), P(None)) + ops_
+
+
+def gather_in_specs(axis: str, *, collective: bool) -> tuple:
+    if collective:
+        return (P(axis, None), P(None), P(axis, None, None, None))
+    return (P(axis, None), P(None), P(axis, None), P(axis, None))
+
+
+def pooled_out_specs(axis: str, ndim: int, *, replicate: bool):
+    """Replicated pooled output, or the reduce-scattered layout where each
+    shard holds its contiguous segment slice (leading dim sharded)."""
+    if replicate:
+        return P(*(None,) * ndim)
+    return P(axis, *(None,) * (ndim - 1))

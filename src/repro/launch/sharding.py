@@ -180,7 +180,15 @@ def table_row_sharding(mesh, axis: str = "model") -> NamedSharding:
     sharded :class:`~repro.core.executor.ProgramExecutor` gives its fused
     stacked buffers and routed ``(S, …)`` offset-stream buckets (leading dim
     = shard)."""
-    return NamedSharding(mesh, P(axis, None))
+    return leading_axis_sharding(mesh, axis, 2)
+
+
+def leading_axis_sharding(mesh, axis: str = "model",
+                          ndim: int = 2) -> NamedSharding:
+    """Shard only the leading dim over ``axis`` — stacked tables and routed
+    2-D buckets (``ndim=2``), and the collective exchange's ``(S_src, …)``
+    send buffers (``ndim`` 3/4: dim 0 = source shard)."""
+    return NamedSharding(mesh, P(axis, *((None,) * (ndim - 1))))
 
 
 def replicated_sharding(mesh, ndim: int = 1) -> NamedSharding:

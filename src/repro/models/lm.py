@@ -273,7 +273,11 @@ class LM:
         the replicated single-device executor.  ``hot_rows`` (e.g. from
         :func:`repro.core.access_plan.hot_rows_from_traces` over decode
         token traces) replicates the classified Zipf head of each vocab on
-        every shard so those lookups skip the offset-stream exchange."""
+        every shard so those lookups skip the offset-stream exchange.
+        ``exchange=``/``replicate_outputs=`` (forwarded via ``**kw``)
+        select the sharded exchange mode — the device-collective
+        ``all_to_all`` + reduce-scatter default, or the ``"host"`` scatter
+        with fully-replicated outputs."""
         from ..core.executor import executor_for
         if mesh == "auto":
             mesh = self.shard.mesh

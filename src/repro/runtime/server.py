@@ -68,6 +68,13 @@ class DecodeServer:
         s["executor_cache"] = self._emb_exec.executor_cache_stats()
         s["executor"] = dict(self.emb_executor.stats)
         s["executor"]["shards"] = self.emb_executor.shards
+        # sharded serving observability: which exchange moves the offset
+        # streams (host scatter vs device all_to_all) and whether pooled
+        # outputs are reduce-scattered or replicated — with host_syncs in
+        # the stats dict above, the per-step transfer count it saves
+        s["executor"]["exchange"] = self.emb_executor.exchange
+        s["executor"]["replicate_outputs"] = \
+            self.emb_executor.replicate_outputs
         # the compiled access side, observable: hot/cold layout, exchange
         # bytes est. vs. actual, per-pass plan-build time (plan-access)
         s["access_plans"] = self.emb_executor.access_plan_stats()

@@ -169,6 +169,10 @@ class Trainer:
                 executor_cache_stats()
             out["embedding_compile"]["executor"] = \
                 dict(self.emb_executor.stats)
+            out["embedding_compile"]["executor"]["exchange"] = \
+                self.emb_executor.exchange
+            out["embedding_compile"]["executor"]["replicate_outputs"] = \
+                self.emb_executor.replicate_outputs
             out["embedding_compile"]["access_plans"] = \
                 self.emb_executor.access_plan_stats()
         return out

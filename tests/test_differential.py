@@ -1,0 +1,282 @@
+"""Differential test harness — the oracle of record for the executor.
+
+Randomly generated :class:`EmbeddingProgram`s (mixed sls/kg/gather,
+weighted/unweighted, shared tables, mixed semirings) and random ragged CSR
+steps (zero-length segments, empty steps, pow-2-boundary nnz) run through
+the steady-state :class:`ProgramExecutor` and must reproduce the
+``core/interp.py`` DLC oracle (``run_program_interpreted`` — the
+queue-faithful interpreter of the SAME compiled artifact) across the full
+configuration cross-product:
+
+    opt_level × backend(jax|pallas) × mesh(1|2) × hot_rows(off|on)
+              × exchange(host|collective) × replicate_outputs
+
+The deterministic corpus below needs nothing beyond numpy (the full
+``pytest`` run sweeps ≥200 generated program/step cases; ``--fast`` — the
+``tier1.sh --fast`` smoke — keeps a small subset, the same way tier1.sh
+gates the benches).  When ``hypothesis`` is installed (requirements-dev,
+CI) an additional property test explores the same generator space with
+shrinking.  The 2-device mesh leg runs the corpus in a forced-2-device
+subprocess via the ``run_on_mesh`` conftest fixture.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.executor import ProgramExecutor
+from repro.core.ops import EmbeddingOp, EmbeddingProgram, Semiring
+from repro.core.pipeline import compile_program, run_program_interpreted
+
+VLEN = 4
+ATOL = RTOL = 1e-5
+
+# full-run corpus size: 28 seeds × (2 opt levels × 2 backends × 2 steps)
+# = 224 differential cases on the single-device leg alone (the 2-device
+# leg and the hypothesis sweep add more); --fast keeps 4 seeds.
+SEEDS_FULL = 28
+SEEDS_FAST = 4
+
+_SEMIRINGS = (Semiring(), Semiring(), Semiring(),        # mostly (add, mul)
+              Semiring("max"), Semiring("min"),
+              Semiring("max", "add"))
+
+
+# ---------------------------------------------------------------------------
+# Generators (shared by the corpus tests, the hypothesis strategy, and the
+# 2-device subprocess — keep them importable without pytest fixtures)
+# ---------------------------------------------------------------------------
+
+def gen_program(pick_int, pick_bool) -> EmbeddingProgram:
+    """Build a random program from two primitive choice functions
+    (``pick_int(lo, hi)`` inclusive, ``pick_bool()``) so the same generator
+    space serves seeded-rng corpora and hypothesis draws."""
+    n_ops = pick_int(1, 4)
+    emb_base = (4, 8)[pick_int(0, 1)]
+    ops = []
+    for i in range(n_ops):
+        kind = ("sls", "sls", "kg", "gather")[pick_int(0, 3)]
+        # an off-width op becomes an unfusable singleton now and then
+        emb = emb_base if pick_int(0, 4) else (4 if emb_base == 8 else 8)
+        sr = _SEMIRINGS[pick_int(0, len(_SEMIRINGS) - 1)]
+        if kind == "gather":
+            op = EmbeddingOp("gather", pick_int(1, 5), pick_int(1, 16),
+                             emb, block_rows=pick_int(1, 2))
+        elif kind == "kg":
+            op = EmbeddingOp("kg", pick_int(1, 6), pick_int(1, 20), emb,
+                             semiring=sr)
+        else:
+            op = EmbeddingOp("sls", pick_int(1, 6), pick_int(1, 20), emb,
+                             avg_lookups=pick_int(0, 4),
+                             weighted=pick_bool(), semiring=sr)
+        ops.append((f"op{i}", op))
+    # shared tables: any same-shape pair of same-kind ops may share
+    shared = []
+    if len(ops) >= 2 and pick_bool():
+        for i in range(len(ops)):
+            for j in range(i + 1, len(ops)):
+                a, b = ops[i][1], ops[j][1]
+                if (a.kind == b.kind and
+                        a.num_embeddings == b.num_embeddings and
+                        a.emb_len == b.emb_len and
+                        a.block_rows == b.block_rows):
+                    shared.append((ops[i][0], ops[j][0]))
+                    break
+            if shared:
+                break
+    return EmbeddingProgram("diff", tuple(ops),
+                            shared_tables=tuple(shared))
+
+
+def random_program(rng) -> EmbeddingProgram:
+    return gen_program(lambda lo, hi: int(rng.integers(lo, hi + 1)),
+                       lambda: bool(rng.integers(0, 2)))
+
+
+def random_tables(rng, prog: EmbeddingProgram) -> dict:
+    """One table array per op (shared-table groups alias ONE array —
+    steady-state params the executor binds once)."""
+    tables: dict = {}
+    by_slot: dict = {}
+    for name, op in prog.ops:
+        slot = prog.table_slot(name)
+        if slot not in by_slot:
+            rows = op.num_embeddings * (op.block_rows
+                                        if op.kind == "gather" else 1)
+            by_slot[slot] = rng.standard_normal(
+                (rows, op.emb_len)).astype(np.float32)
+        tables[name] = by_slot[slot]
+    return tables
+
+
+def random_step(rng, prog: EmbeddingProgram, tables: dict) -> dict:
+    """One ragged step: Poisson segment lengths with a fat tail of
+    zero-length segments, ~1-in-8 fully-empty CSR streams, and uniform
+    indices (the mesh leg layers hot/cold on top)."""
+    step: dict = {}
+    for name, op in prog.ops:
+        ins: dict = {"table": tables[name]}
+        if op.kind == "gather":
+            ins["idxs"] = rng.integers(
+                0, op.num_embeddings, op.num_segments).astype(np.int32)
+        elif op.kind == "kg":
+            ins["idxs"] = rng.integers(
+                0, op.num_embeddings, op.num_segments).astype(np.int32)
+            ins["vals"] = rng.standard_normal(
+                op.num_segments).astype(np.float32)
+        else:
+            lens = rng.poisson(max(op.avg_lookups, 1), op.num_segments)
+            lens[rng.random(op.num_segments) < 0.25] = 0
+            if rng.random() < 0.125:
+                lens[:] = 0                      # empty step
+            ptrs = np.zeros(op.num_segments + 1, np.int64)
+            np.cumsum(lens, out=ptrs[1:])
+            nnz = int(ptrs[-1])
+            ins["ptrs"] = ptrs
+            ins["idxs"] = rng.integers(
+                0, op.num_embeddings, nnz).astype(np.int32)
+            if op.weighted:
+                ins["vals"] = rng.standard_normal(nnz).astype(np.float32)
+        step[name] = ins
+    return step
+
+
+def random_hot_rows(rng, prog: EmbeddingProgram) -> dict:
+    """A random hot classification: up to half of each vocab's rows."""
+    hot: dict = {}
+    for name, op in prog.ops:
+        k = int(rng.integers(0, max(op.num_embeddings // 2, 1) + 1))
+        if k:
+            hot[name] = tuple(int(i) for i in rng.choice(
+                op.num_embeddings, size=k, replace=False))
+    return hot
+
+
+def check_case(pres, ex: ProgramExecutor, steps: list, oracles: list,
+               tag: str) -> int:
+    """Run ``steps`` through ``ex`` and compare each against its DLC-interp
+    oracle; returns the number of (program, step) cases checked."""
+    for k, (ins, want) in enumerate(zip(steps, oracles)):
+        got = ex.step(ins)
+        for n in want:
+            np.testing.assert_allclose(
+                np.asarray(got[n]), want[n], rtol=RTOL, atol=ATOL,
+                err_msg=f"{tag} step {k} op {n}")
+    return len(steps)
+
+
+def run_differential_seed(seed: int, opt_levels=None) -> int:
+    """One corpus seed on the single-device leg: compile per opt level,
+    oracle once per (opt level, step), executor per backend."""
+    rng = np.random.default_rng(seed)
+    prog = random_program(rng)
+    tables = random_tables(rng, prog)
+    steps = [random_step(rng, prog, tables) for _ in range(2)]
+    opts = opt_levels or (("O1", "O3") if seed % 2 == 0 else ("O2", "O3"))
+    cases = 0
+    for opt in opts:
+        pres = compile_program(prog, opt, vlen=VLEN, use_cache=False)
+        oracles = [run_program_interpreted(pres, s) for s in steps]
+        for backend in ("jax", "pallas"):
+            ex = ProgramExecutor(pres, backend=backend)
+            cases += check_case(pres, ex, steps, oracles,
+                                f"seed {seed} {opt} {backend}")
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# Single-device corpus (no hypothesis required)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(SEEDS_FULL))
+def test_differential_corpus_single_device(seed, fast_mode):
+    if fast_mode and seed >= SEEDS_FAST:
+        pytest.skip("--fast smoke subset (full run sweeps all seeds)")
+    assert run_differential_seed(seed) == 8   # 2 opts × 2 backends × 2 steps
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep of the same generator space (CI installs hypothesis;
+# the container suite skips, exactly like tests/test_ir_property.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @st.composite
+    def _programs(draw):
+        prog = gen_program(lambda lo, hi: draw(st.integers(lo, hi)),
+                           lambda: draw(st.booleans()))
+        return prog, draw(st.integers(0, 2 ** 31 - 1))
+
+    # max_examples comes from the profile conftest loads (20 full / 5 fast)
+    @settings(deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(case=_programs())
+    def test_differential_hypothesis(case):
+        prog, seed = case
+        rng = np.random.default_rng(seed)
+        tables = random_tables(rng, prog)
+        steps = [random_step(rng, prog, tables)]
+        pres = compile_program(prog, "O3", vlen=VLEN, use_cache=False)
+        oracles = [run_program_interpreted(pres, s) for s in steps]
+        for backend in ("jax", "pallas"):
+            ex = ProgramExecutor(pres, backend=backend)
+            check_case(pres, ex, steps, oracles, f"hyp {backend}")
+
+except ImportError:      # pragma: no cover - exercised in the container
+    @pytest.mark.skip(reason="property sweep needs hypothesis "
+                             "(pip install -r requirements-dev.txt)")
+    def test_differential_hypothesis():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# 2-device mesh leg: the corpus across hot_rows × exchange ×
+# replicate_outputs, in a forced-2-device subprocess
+# ---------------------------------------------------------------------------
+
+def test_differential_two_device_mesh(run_on_mesh, fast_mode):
+    seeds = 2 if fast_mode else 6
+    code = f"""
+        import sys
+        sys.path.insert(0, "tests")
+        import numpy as np
+        import jax
+        import test_differential as td
+        from repro.core.executor import ProgramExecutor
+        from repro.core.pipeline import (compile_program,
+                                         run_program_interpreted)
+        from repro.launch.mesh import axis_types_kw
+
+        mesh = jax.make_mesh((1, 2), ("data", "model"), **axis_types_kw(2))
+        cases = 0
+        for seed in range({seeds}):
+            rng = np.random.default_rng(10_000 + seed)
+            prog = td.random_program(rng)
+            tables = td.random_tables(rng, prog)
+            steps = [td.random_step(rng, prog, tables) for _ in range(2)]
+            hot = td.random_hot_rows(rng, prog)
+            pres = compile_program(prog, "O3", vlen=td.VLEN,
+                                   use_cache=False)
+            oracles = [run_program_interpreted(pres, s) for s in steps]
+            for backend in ("jax", "pallas"):
+                for exchange, repl in (("host", True),
+                                       ("collective", False),
+                                       ("collective", True)):
+                    for hr in (None, hot):
+                        ex = ProgramExecutor(
+                            pres, backend=backend, mesh=mesh,
+                            exchange=exchange, replicate_outputs=repl,
+                            hot_rows=hr)
+                        cases += td.check_case(
+                            pres, ex, steps, oracles,
+                            f"seed {{seed}} {{backend}} {{exchange}} "
+                            f"repl={{repl}} hot={{hr is not None}}")
+        print("DIFF_MESH_OK", cases)
+    """
+    r = run_on_mesh(code, devices=2, timeout=1800, sentinel="DIFF_MESH_OK")
+    cases = int(r.stdout.split("DIFF_MESH_OK")[-1].split()[0])
+    assert cases == seeds * 2 * 3 * 2 * 2   # backends×exchange/repl×hot×steps

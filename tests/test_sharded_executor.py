@@ -1,14 +1,12 @@
 """Vocab-sharded fused programs: AccessPlan layout/routing math (incl. the
-hot/cold split), per-shard cost model, mesh-of-size-1 identity with the
-single-device executor, and (in a 2-device subprocess, the ``test_launch``
-pattern) end-to-end sharded numerics — mixed weighted/unweighted + kg
-fusion, max-semiring merge, empty shards/steps, hot-slab batches, both
-execute backends, footprint halving, sharded ``update_tables`` and the
-executor-cache keying."""
-import subprocess
-import sys
-import textwrap
-
+hot/cold split and the collective send lattice), per-shard cost model,
+mesh-of-size-1 identity with the single-device executor, and (in a
+2-device subprocess via the ``run_on_mesh`` conftest fixture) end-to-end
+sharded numerics — mixed weighted/unweighted + kg fusion, max-semiring
+merge, empty shards/steps, hot-slab batches, both execute backends, both
+exchange modes (host scatter / device all_to_all + reduce-scatter),
+footprint halving, sharded ``update_tables`` and the executor-cache
+keying."""
 import numpy as np
 import pytest
 
@@ -217,6 +215,187 @@ def test_route_csr_empty_stream_and_empty_shard():
     assert (routed["ptrs"][1] == 0).all()
 
 
+def _unpack_lattice(routed, plan, need_vals=True):
+    """Pack a collective routing into its send lattice and flatten it back
+    into the set of (seg, src, dst, local[, val]) tuples it carries (pad
+    slots dropped) — the round-trip the device all_to_all relies on."""
+    s = plan.shards
+    B = plan.num_segments
+    packed = plan.packed_lattice(routed)
+    ints, vals = packed["ints"], packed["vals"]
+    got = set()
+    for src in range(s):
+        for dst in range(s):
+            for k in range(ints.shape[-1]):
+                seg = int(ints[src, dst, 0, k])
+                if seg >= B:            # pad sentinel
+                    continue
+                item = (seg, src, dst, int(ints[src, dst, 1, k]))
+                if need_vals:
+                    item += (float(vals[src, dst, k]),)
+                got.add(item)
+    return got
+
+
+def test_route_csr_collective_matches_host_routing():
+    """The collective send lattice carries exactly the host route's
+    (segment, owner, local address, val) resolution, with the source shard
+    = the lookup's contiguous segment slice."""
+    g = _csr_group()
+    plan = ap.plan_for_group(g, shards=2)
+    seg = np.array([0, 0, 1, 3, 4, 4, 5, 6], np.int64)
+    idxs = np.array([9, 2, 5, 0, 6, 1, 3, 4], np.int64)
+    vals = np.arange(8, dtype=np.float32)
+    routed = plan.route_csr_collective(_group_inputs(g, seg, idxs, vals))
+    assert plan.seg_cap == 4            # 7 fused segments over 2 shards
+    # same ownership oracle as test_route_csr_...: C=[5,4], base=[0,5]
+    caps = np.array([5, 5, 5, 5, 4, 4, 4, 4], np.int64)
+    base = np.array([0, 0, 0, 0, 5, 5, 5, 5], np.int64)
+    want = {(int(b), int(b // plan.seg_cap), int(i // c), int(o + i % c),
+             float(v))
+            for b, i, c, o, v in zip(seg, idxs, caps, base, vals)}
+    assert _unpack_lattice(routed, plan) == want
+    # wire volume counts off-diagonal lookups only
+    off_diag = sum(1 for (_, src, dst, _, _) in want if src != dst)
+    assert routed["wire_nnz"] == off_diag
+    assert routed["hot_nnz"] == 0 and routed["cold_nnz"] == 8
+    # per-destination nnz agrees with the host route
+    host = plan.route_csr(_group_inputs(g, seg, idxs, vals))
+    assert routed["nnz"].tolist() == host["nnz"].tolist()
+
+
+def test_route_csr_collective_hot_is_diagonal():
+    """Hot lookups are served at their source shard under the collective
+    exchange — the whole hot batch sits on the send-lattice diagonal and
+    wire_nnz is zero."""
+    g = _csr_group()
+    plan = ap.plan_for_group(g, shards=2,
+                             hot_rows={"a": tuple(range(10)),
+                                       "b": tuple(range(7))})
+    seg = np.array([0, 1, 4, 5], np.int64)
+    idxs = np.array([3, 8, 2, 6], np.int64)
+    routed = plan.route_csr_collective(_group_inputs(g, seg, idxs))
+    assert routed["hot_nnz"] == 4 and routed["wire_nnz"] == 0
+    for seg_, src, dst, _ in _unpack_lattice(routed, plan,
+                                             need_vals=False):
+        assert src == dst == seg_ // plan.seg_cap
+
+
+def test_route_csr_collective_empty_and_boundary_buckets():
+    from repro.core.capacity import collective_exchange_capacity
+    g = _csr_group()
+    plan = ap.plan_for_group(g, shards=2)
+    empty = _group_inputs(g, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    routed = plan.route_csr_collective(empty)
+    assert routed["cap"] == 1 and routed["max_lookups"] == 1
+    assert routed["wire_nnz"] == 0
+    ints = plan.packed_lattice(routed)["ints"]
+    assert (ints[:, :, 0] == plan.num_segments).all()   # pad sentinel only
+    # bucket boundary: a pair count exactly at the pow-2 edge keeps the
+    # bucket; one more lookup doubles it
+    assert collective_exchange_capacity([[4, 0], [0, 0]], [4]) == (4, 4)
+    assert collective_exchange_capacity([[5, 0], [0, 0]], [5]) == (8, 6)
+    # 4 lookups of segment 0 (source shard 0) all owned by shard 0 -> one
+    # (0,0) pair of exactly 4 = the pow-2 edge
+    seg = np.zeros(4, np.int64)
+    idxs = np.array([0, 1, 2, 3], np.int64)
+    vals = np.ones(4, np.float32)
+    routed = plan.route_csr_collective(_group_inputs(g, seg, idxs, vals))
+    assert routed["pair_counts"].tolist() == [[4, 0], [0, 0]]
+    assert routed["cap"] == 4
+    five = _group_inputs(g, np.zeros(5, np.int64),
+                         np.array([0, 1, 2, 3, 4], np.int64),
+                         np.ones(5, np.float32))
+    assert plan.route_csr_collective(five)["cap"] == 8
+
+
+def test_plan_single_row_vocab_slot():
+    """A 1-row vocab splits into a 1-row cold slice on shard 0 and pure
+    padding on shard 1; every lookup routes to shard 0."""
+    prog = EmbeddingProgram("tiny", (
+        ("one", EmbeddingOp("sls", 4, 1, 8, avg_lookups=2)),
+        ("big", EmbeddingOp("sls", 3, 12, 8, avg_lookups=2)),
+    ))
+    units, _ = fuse_program(prog)
+    (group,) = units
+    plan = ap.plan_for_group(group, shards=2)
+    assert plan.slots[0].cap == 1 and plan.slots[0].rows == 1
+    seg = np.array([0, 2, 4], np.int64)     # two lookups of the 1-row slot
+    idxs = np.array([0, 0, 5], np.int64)
+    routed = plan.route_csr(_group_inputs(group, seg, idxs))
+    host = {(int(routed["idxs"][k]), o)
+            for o in range(2)
+            for k in range(routed["bounds"][o], routed["bounds"][o + 1])}
+    assert (plan.slots[0].cold_base, 0) in host
+    coll = plan.route_csr_collective(_group_inputs(group, seg, idxs))
+    for seg_, src, dst, local in _unpack_lattice(coll, plan,
+                                                 need_vals=False):
+        if seg_ in (0, 2):              # the 1-row slot's segments
+            assert dst == 0 and local == plan.slots[0].cold_base
+    # the stacked layout puts the single row on shard 0 only
+    rng = np.random.default_rng(3)
+    parts = [rng.standard_normal((1, 8)).astype(np.float32),
+             rng.standard_normal((12, 8)).astype(np.float32)]
+    glob = plan.stack_np(parts)
+    np.testing.assert_array_equal(glob[plan.slots[0].cold_base], parts[0][0])
+
+
+def test_plan_hot_covers_entire_slot():
+    """hot_rows spanning a whole vocab leaves an empty cold tail: the cold
+    slice degenerates to the 1-row padding cap, every lookup is hot, and
+    routing still round-trips."""
+    g = _csr_group()
+    plan = ap.plan_for_group(g, shards=2,
+                             hot_rows={"a": tuple(range(10))})
+    s0 = plan.slots[0]
+    assert s0.cold_rows == 0 and s0.hot_rows == 10
+    assert s0.cap == 1                  # padding-only cold slice
+    seg = np.array([0, 1, 2, 3], np.int64)
+    idxs = np.array([7, 0, 9, 3], np.int64)
+    routed = plan.route_csr(_group_inputs(g, seg, idxs))
+    assert routed["hot_nnz"] == 4 and routed["cold_nnz"] == 0
+    lo = s0.hot_base
+    for o in range(2):
+        a, b = routed["bounds"][o], routed["bounds"][o + 1]
+        assert (routed["idxs"][a:b] >= lo).all()
+    coll = plan.route_csr_collective(_group_inputs(g, seg, idxs))
+    assert coll["wire_nnz"] == 0
+    # the stacked table still replicates every row (as hot slab)
+    rng = np.random.default_rng(4)
+    parts = [rng.standard_normal((10, 8)).astype(np.float32),
+             rng.standard_normal((7, 8)).astype(np.float32)]
+    glob = plan.stack_np(parts)
+    for sh in range(2):
+        for pos, row in enumerate(s0.hot_ids):
+            np.testing.assert_array_equal(
+                glob[sh * plan.local_rows + s0.hot_base + pos],
+                parts[0][row])
+
+
+def test_route_gather_collective_round_trip():
+    prog = EmbeddingProgram("gg", (
+        ("g1", EmbeddingOp("gather", 3, 10, 8, block_rows=2)),
+        ("g2", EmbeddingOp("gather", 3, 10, 8, block_rows=2)),
+    ), shared_tables=(("g1", "g2"),))
+    units, _ = fuse_program(prog)
+    (group,) = units
+    plan = ap.plan_for_group(group, shards=2)
+    ins = {"g1": {"idxs": np.array([9, 0, 4], np.int64)},
+           "g2": {"idxs": np.array([1, 6, 2], np.int64)}}
+    routed = plan.route_gather_collective(ins)
+    cap = plan.slots[0].cap
+    base = plan.slots[0].cold_base
+    want = set()
+    for m, name in ((0, "g1"), (1, "g2")):
+        for k, i in enumerate(ins[name]["idxs"]):
+            seg = m * 3 + k
+            want.add((seg, int(seg // plan.seg_cap), int(i // cap),
+                      int(base + i % cap)))
+    assert _unpack_lattice(routed, plan, need_vals=False) == want
+    host = plan.route_gather(ins)
+    assert routed["cold_segments"] == host["cold_segments"] == 6
+
+
 def test_exchange_capacity_buckets():
     # pow-2 nnz bucket over the shard max; quarter-octave max_lookups —
     # the canonical policy of repro.core.capacity, re-exported by kernels
@@ -334,10 +513,8 @@ def test_shard_count_helper():
 # End-to-end on a real 2-device mesh (subprocess; test_launch pattern)
 # ---------------------------------------------------------------------------
 
-def test_sharded_executor_two_devices():
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+def test_sharded_executor_two_devices(run_on_mesh):
+    code = """
         import jax
         import numpy as np
         from repro.core import cost_model
@@ -525,10 +702,124 @@ def test_sharded_executor_two_devices():
         assert e_shrd.compiled.units[0].result.op is not None
         assert executor_for(prog3, "O3", vlen=4, backend="jax",
                             mesh=mesh) is e_shrd
+        # exchange mode + output placement are cache-key components too
+        e_coll = executor_for(prog3, "O3", vlen=4, backend="jax",
+                              mesh=mesh, exchange="collective")
+        e_host = executor_for(prog3, "O3", vlen=4, backend="jax",
+                              mesh=mesh, exchange="host")
+        e_esc = executor_for(prog3, "O3", vlen=4, backend="jax",
+                             mesh=mesh, exchange="collective",
+                             replicate_outputs=True)
+        assert e_coll is e_shrd            # collective is the mesh default
+        assert e_host is not e_coll and e_esc is not e_coll
+        assert e_coll.replicate_outputs is False
+        assert e_host.replicate_outputs is True
         print("SHARDED_EXEC_OK")
-    """)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True,
-                       env={**__import__("os").environ, "PYTHONPATH": "src"},
-                       cwd="/root/repo", timeout=600)
-    assert "SHARDED_EXEC_OK" in r.stdout, r.stderr[-3000:]
+    """
+    run_on_mesh(code, devices=2, sentinel="SHARDED_EXEC_OK")
+
+
+def test_exchange_edge_cases_two_devices(run_on_mesh):
+    """The exchange edge cases of both exchange modes, end-to-end: zero-nnz
+    step, every-segment-empty under the max semiring (⊕-identity across the
+    merge), single-row vocab slot, hot set covering an entire slot, and the
+    bucket-boundary step (nnz exactly at a pow-2 capacity edge) — each
+    checked against the numpy program reference on both backends, with
+    reduce-scattered AND replicated outputs."""
+    code = """
+        import jax
+        import numpy as np
+        from repro.core.executor import ProgramExecutor
+        from repro.core.ops import (EmbeddingOp, EmbeddingProgram, Semiring,
+                                    make_program_inputs, program_reference)
+        from repro.core.pipeline import compile_program
+        from repro.launch.mesh import axis_types_kw
+
+        mesh = jax.make_mesh((1, 2), ("data", "model"), **axis_types_kw(2))
+
+        def check(ex, prog, ins, tag):
+            got = ex.step(ins)
+            for n, w in program_reference(prog, ins).items():
+                np.testing.assert_allclose(
+                    np.asarray(got[n]), w, rtol=1e-5, atol=1e-5,
+                    err_msg=f"{n} {tag}")
+
+        def sweep(prog, steps, tag, hot_rows=None):
+            pres = compile_program(prog, "O3", vlen=4, use_cache=False)
+            for backend in ("jax", "pallas"):
+                for exchange in ("host", "collective"):
+                    for repl in (True, False):
+                        ex = ProgramExecutor(
+                            pres, backend=backend, mesh=mesh,
+                            exchange=exchange, replicate_outputs=repl,
+                            hot_rows=hot_rows)
+                        for k, ins in enumerate(steps):
+                            check(ex, prog, ins,
+                                  f"{tag} {backend} {exchange} repl={repl} "
+                                  f"step{k}")
+
+        # --- zero-nnz step + every-segment-empty under pmax ---
+        progm = EmbeddingProgram("maxempty", (
+            ("a", EmbeddingOp("sls", 4, 12, 8, avg_lookups=3,
+                              semiring=Semiring("max"))),
+            ("b", EmbeddingOp("sls", 3, 9, 8, avg_lookups=2,
+                              semiring=Semiring("max"))),
+        ))
+        full = make_program_inputs(progm, seed=0)
+        empty = {n: dict(full[n]) for n in full}
+        for n in empty:
+            empty[n]["ptrs"] = np.zeros_like(empty[n]["ptrs"])
+            empty[n]["idxs"] = empty[n]["idxs"][:0]
+        # all-empty first (the ⊕-identity-only merge), then a real step on
+        # the SAME executors' trace caches
+        sweep(progm, [empty, full, empty], "pmax-empty")
+
+        # --- zero-nnz step, add semiring, weighted group ---
+        progw = EmbeddingProgram("wempty", (
+            ("w", EmbeddingOp("sls", 4, 10, 8, avg_lookups=3,
+                              weighted=True)),
+            ("u", EmbeddingOp("sls", 3, 7, 8, avg_lookups=2)),
+        ))
+        fullw = make_program_inputs(progw, seed=1)
+        emptyw = {n: dict(fullw[n]) for n in fullw}
+        for n in emptyw:
+            emptyw[n]["ptrs"] = np.zeros_like(emptyw[n]["ptrs"])
+            emptyw[n]["idxs"] = emptyw[n]["idxs"][:0]
+            if "vals" in emptyw[n]:
+                emptyw[n]["vals"] = emptyw[n]["vals"][:0]
+        sweep(progw, [emptyw, fullw], "add-empty")
+
+        # --- single-row vocab slot ---
+        prog1 = EmbeddingProgram("tiny", (
+            ("one", EmbeddingOp("sls", 4, 1, 8, avg_lookups=2)),
+            ("big", EmbeddingOp("sls", 3, 12, 8, avg_lookups=2)),
+        ))
+        ins1 = make_program_inputs(prog1, seed=2)
+        sweep(prog1, [ins1], "single-row")
+
+        # --- hot set covering an entire slot ---
+        progh = EmbeddingProgram("allhot", (
+            ("a", EmbeddingOp("sls", 4, 8, 8, avg_lookups=3)),
+            ("b", EmbeddingOp("sls", 3, 10, 8, avg_lookups=2)),
+        ))
+        insh = make_program_inputs(progh, seed=3)
+        hot = {"a": tuple(range(8))}
+        sweep(progh, [insh], "full-hot-slot", hot_rows=hot)
+
+        # --- bucket-boundary step: fused nnz exactly at a pow-2 edge ---
+        progb = EmbeddingProgram("edge", (
+            ("a", EmbeddingOp("sls", 4, 16, 8, avg_lookups=4)),
+            ("b", EmbeddingOp("sls", 4, 10, 8, avg_lookups=4)),
+        ))
+        insb = make_program_inputs(progb, seed=4)
+        rng = np.random.default_rng(5)
+        for n, rows in (("a", 16), ("b", 10)):         # fused nnz = 16 = 2^4
+            insb[n]["ptrs"] = np.array([0, 2, 4, 6, 8], np.int64)
+            insb[n]["idxs"] = rng.integers(0, rows, 8).astype(np.int32)
+        plus = {n: dict(insb[n]) for n in insb}        # nnz = 17: next bucket
+        plus["a"]["ptrs"] = np.array([0, 3, 5, 7, 9], np.int64)
+        plus["a"]["idxs"] = rng.integers(0, 16, 9).astype(np.int32)
+        sweep(progb, [insb, plus], "bucket-edge")
+        print("EDGE_CASES_OK")
+    """
+    run_on_mesh(code, devices=2, sentinel="EDGE_CASES_OK")
