@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [characterization|dae_potential|ablation|
-blocksparse|vs_handopt|lm_step|steady_state|sharded|locality]``.
+blocksparse|vs_handopt|lm_step|steady_state|sharded|locality|serving]``.
 
 ``--json PATH`` additionally writes every reported row (plus the cache
 stats) as machine-readable JSON — what CI consumes; ``-`` writes JSON to
@@ -15,7 +15,8 @@ import json
 import sys
 
 BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
-           "vs_handopt", "lm_step", "steady_state", "sharded", "locality"]
+           "vs_handopt", "lm_step", "steady_state", "sharded", "locality",
+           "serving"]
 
 
 def main() -> None:

@@ -1,16 +1,16 @@
 #!/usr/bin/env python
-"""Fail CI when a freshly-measured BENCH_*.json regresses its exchange
-bytes vs. the committed baseline by more than 10%.
+"""Fail CI when a freshly-measured BENCH_*.json regresses a tracked
+metric vs. the committed baseline by more than 10%.
 
 The tier1 workflow refreshes the ``BENCH_*.json`` records in the workspace
-(``scripts/tier1.sh --fast``); this script diffs the *byte-counted*
-exchange metrics — deterministic layout/routing products, unlike the
-noisy µs timings — against the versions committed at HEAD (``git show``).
-A metric missing on either side is reported and skipped (new benches and
-schema growth are not regressions), as is a record whose benchmark
-``config`` differs from the baseline's (byte counts are only comparable
-within one workload); a >10% increase in any tracked metric exits
-non-zero.
+(``scripts/tier1.sh --fast``); this script diffs the tracked metrics
+against the versions committed at HEAD (``git show``).  Each metric is
+direction-aware: exchange-bytes and serving-latency metrics are
+lower-is-better (a >10% increase fails), serving-throughput metrics are
+higher-is-better (a >10% drop fails).  A metric missing on either side is
+reported and skipped (new benches and schema growth are not regressions),
+as is a record whose benchmark ``config`` differs from the baseline's
+(numbers are only comparable within one workload).
 
 The workflow passes the PR's merge base (``origin/<base branch>``) or, on
 push, ``HEAD^`` as the baseline ref — never the commit under test, which
@@ -29,16 +29,31 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-#: (file, dotted metric path) — every tracked metric counts exchanged
-#: bytes per step; lower is better, +10% fails.
+#: (file, dotted metric path, direction).  "lower" = lower is better, a
+#: +10% increase fails; "higher" = higher is better, a -10% drop fails.
+#: The exchange metrics are deterministic byte counts; the serving
+#: metrics are wall-clock service numbers (the 10% band absorbs machine
+#: noise at the smoke sizes tier1.sh --fast runs them at).
 METRICS = (
-    ("BENCH_sharded.json", "exchange_measured.index_bytes_per_step"),
-    ("BENCH_sharded.json", "exchange_measured.row_bytes_per_step"),
+    ("BENCH_sharded.json", "exchange_measured.index_bytes_per_step",
+     "lower"),
+    ("BENCH_sharded.json", "exchange_measured.row_bytes_per_step",
+     "lower"),
     ("BENCH_sharded.json",
-     "exchange_ablation.collective.index_bytes_per_step"),
+     "exchange_ablation.collective.index_bytes_per_step", "lower"),
     ("BENCH_sharded.json",
-     "exchange_ablation.collective.row_bytes_per_step"),
-    ("BENCH_locality.json", "exchange_index_bytes_per_step.hot_cold"),
+     "exchange_ablation.collective.row_bytes_per_step", "lower"),
+    ("BENCH_locality.json", "exchange_index_bytes_per_step.hot_cold",
+     "lower"),
+    # serving loop (PR 6): p99 service latency must not inflate, and
+    # neither open-loop throughput nor the cross-program pipeline's
+    # tokens/sec may fall behind the committed baseline
+    ("BENCH_serving.json", "open_loop.saturating.ttft_ms.p99", "lower"),
+    ("BENCH_serving.json", "open_loop.saturating.token_latency_ms.p99",
+     "lower"),
+    ("BENCH_serving.json", "open_loop.saturating.tokens_per_sec",
+     "higher"),
+    ("BENCH_serving.json", "pipeline.pipelined_tokens_per_sec", "higher"),
 )
 
 TOLERANCE = 0.10
@@ -71,16 +86,16 @@ def main() -> int:
 
     failures = []
     config_ok: dict = {}
-    for name, path in METRICS:
+    for name, path, direction in METRICS:
         fresh_path = REPO / name
         if not fresh_path.exists():
             print(f"SKIP {name}:{path} (no fresh record)")
             continue
         fresh_rec = json.loads(fresh_path.read_text())
         base_rec = baseline_json(args.baseline_ref, name)
-        # byte counts are only comparable between runs of the same
-        # workload: a baseline committed from a full-size run must not
-        # silently gate (or trip on) a --fast measurement
+        # metrics are only comparable between runs of the same workload:
+        # a baseline committed from a full-size run must not silently
+        # gate (or trip on) a --fast measurement
         if name not in config_ok:
             fresh_cfg = (fresh_rec or {}).get("config")
             base_cfg = (base_rec or {}).get("config")
@@ -96,14 +111,19 @@ def main() -> int:
             print(f"SKIP {name}:{path} (metric absent: "
                   f"fresh={fresh} baseline={base})")
             continue
-        limit = base * (1 + TOLERANCE)
-        status = "FAIL" if fresh > limit else "ok"
-        print(f"{status:4} {name}:{path}  baseline={base}  fresh={fresh}  "
-              f"limit={limit:.0f}")
-        if fresh > limit:
+        if direction == "lower":
+            limit = base * (1 + TOLERANCE)
+            bad = fresh > limit
+        else:
+            limit = base * (1 - TOLERANCE)
+            bad = fresh < limit
+        status = "FAIL" if bad else "ok"
+        print(f"{status:4} {name}:{path} [{direction}]  baseline={base}  "
+              f"fresh={fresh}  limit={limit:.1f}")
+        if bad:
             failures.append((name, path, base, fresh))
     if failures:
-        print(f"\n{len(failures)} exchange-bytes regression(s) > "
+        print(f"\n{len(failures)} benchmark regression(s) > "
               f"{TOLERANCE:.0%} vs {args.baseline_ref}", file=sys.stderr)
         return 1
     return 0

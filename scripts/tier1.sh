@@ -37,4 +37,9 @@ if [[ "$FAST" == 1 ]]; then
   # outputs identical to the interleaved PR-3 path AND >= 2x less routed
   # exchange volume on the Zipf stream, refreshes BENCH_locality.json
   python benchmarks/bench_locality.py --fast
+  # open-loop serving smoke: continuous-batching server under Poisson load
+  # at 2 QPS points + the cross-program pipeline ablation (asserts
+  # pipeline_group beats the sequential two-program baseline), refreshes
+  # BENCH_serving.json
+  python benchmarks/bench_serving.py --fast
 fi

@@ -93,6 +93,144 @@ class StepHandle:
         return self.outputs
 
 
+class _TxnRef:
+    """Placeholder for one host array riding a :class:`TransferBatch`."""
+    __slots__ = ("i",)
+
+    def __init__(self, i: int):
+        self.i = i
+
+
+class TransferBatch:
+    """One serving wave's coalesced host→device transfer.
+
+    :meth:`PipelineGroup.submit_wave` hands every member executor the same
+    batch: gather-kind jax units stage their per-step streams into it
+    instead of issuing individual transfers, and defer their dispatch as a
+    pure ``run(dev_inputs) -> {op name: output}`` function.  :meth:`flush`
+    ships every collected array in one batched ``jax.device_put`` and runs
+    the deferred dispatches; the pipeline group goes further and traces
+    all of them into a single jitted wave executable
+    (:meth:`PipelineGroup.submit_wave`).  Per-wave transfer and dispatch
+    overhead is paid once per *wave* instead of once per *array/op* — the
+    structural edge of the pipelined serving path over stepping the
+    programs sequentially (benchmarks/bench_serving.py's ablation)."""
+
+    def __init__(self):
+        self._host: list = []
+        # (handle outputs dict, run fn, staged inputs with _TxnRefs)
+        self.fills: list = []
+        self.n_arrays = 0
+
+    def put(self, arr: np.ndarray) -> _TxnRef:
+        self._host.append(arr)
+        self.n_arrays += 1
+        return _TxnRef(len(self._host) - 1)
+
+    def defer(self, outs: dict, run, staged: dict) -> None:
+        self.fills.append((outs, run, staged))
+
+    def flush(self) -> None:
+        """One batched device_put, then the deferred unit dispatches
+        (eagerly — the group's jitted wave path is in submit_wave)."""
+        devs = jax.device_put(self._host) if self._host else []
+        fills, self.fills, self._host = self.fills, [], []
+        for outs, run, staged in fills:
+            outs.update(run({k: devs[v.i] if isinstance(v, _TxnRef) else v
+                             for k, v in staged.items()}))
+
+
+class BufferPool:
+    """Rotating host staging buffers behind the per-step marshaling.
+
+    Each *entry* is a small ring of identically-shaped buffer sets; every
+    slot remembers the :class:`StepHandle` that last packed it (recorded by
+    :meth:`ProgramExecutor.submit`), so a slot is never rewritten while its
+    transfer may still be in flight.  Acquisition scans the ring for a free
+    slot; when every slot is busy the ring **grows** (up to ``max_slots``)
+    instead of stalling — with a *shared* pool a forced drain would block
+    program A's marshal on program B's execute, exactly the serialization
+    the pipeline group exists to avoid.  Only a full ring at ``max_slots``
+    pays a ``forced_drains`` stall.
+
+    ``shared=False`` (each executor's private default) keys entries by
+    ``(executor, unit, capacity bucket)`` — the legacy double-buffer
+    layout.  ``shared=True`` (:func:`pipeline_group`) keys by the canonical
+    *buffer spec signature* alone, so same-shaped staging of different
+    compiled programs draws from one ring: the device-buffer pool that lets
+    two programs pipeline against each other.  Sharing is safe because
+    every marshal path fully overwrites what its kernel reads (CSR tails
+    are padded in-bounds per step).
+    """
+
+    def __init__(self, n_slots: int = 2, max_slots: Optional[int] = None,
+                 shared: bool = False):
+        self.n_slots = max(2, n_slots)
+        self.max_slots = max(self.n_slots, max_slots or self.n_slots * 4)
+        self.shared = shared
+        self._entries: dict = {}
+        self.stats = {"entries": 0, "hits": 0, "misses": 0, "grown": 0,
+                      "forced_drains": 0, "bytes": 0}
+
+    @staticmethod
+    def spec_sig(spec: dict) -> tuple:
+        return tuple(sorted((k, tuple(shape), np.dtype(dt).str)
+                            for k, (shape, dt) in spec.items()))
+
+    def key_for(self, owner_tag, bucket, spec: dict):
+        if self.shared:
+            return self.spec_sig(spec)
+        return (owner_tag, bucket)
+
+    @staticmethod
+    def _alloc(spec: dict) -> dict:
+        return {k: np.zeros(shape, dt) for k, (shape, dt) in spec.items()}
+
+    def _count_bytes(self, spec: dict, n: int) -> None:
+        self.stats["bytes"] += n * sum(
+            int(np.prod(shape)) * np.dtype(dt).itemsize
+            for shape, dt in spec.values())
+
+    def acquire(self, key, spec: dict):
+        """Returns ``(entry, turn, created)``; the caller packs
+        ``entry["slots"][turn]`` and records the owning handle at submit."""
+        entry = self._entries.get(key)
+        created = entry is None
+        if created:
+            entry = {"slots": [self._alloc(spec)
+                               for _ in range(self.n_slots)],
+                     "owners": [None] * self.n_slots, "turn": 0, "uses": 0}
+            self._entries[key] = entry
+            self.stats["misses"] += 1
+            self.stats["entries"] = len(self._entries)
+            self._count_bytes(spec, self.n_slots)
+        else:
+            self.stats["hits"] += 1
+        entry["uses"] += 1
+        n = len(entry["slots"])
+        turn = None
+        for k in range(1, n + 1):
+            t = (entry["turn"] + k) % n
+            owner = entry["owners"][t]
+            if owner is None or owner.done:
+                turn = t
+                break
+        if turn is None:
+            if n < self.max_slots:    # every slot in flight: grow the ring
+                entry["slots"].append(self._alloc(spec))
+                entry["owners"].append(None)
+                turn = n
+                self.stats["grown"] += 1
+                self._count_bytes(spec, 1)
+            else:                     # full ring: drain the oldest owner
+                turn = (entry["turn"] + 1) % n
+                entry["owners"][turn].result()
+                self.stats["forced_drains"] += 1
+        entry["turn"] = turn
+        entry["owners"][turn] = None
+        return entry, turn, created
+
+
 @dataclasses.dataclass
 class _UnitState:
     """Device-resident state of one compiled unit (the marshaling cache).
@@ -163,7 +301,8 @@ class ProgramExecutor:
                  backend: str = "pallas", mesh=None,
                  shard_axis: str = "model", hot_rows=None,
                  exchange: Optional[str] = None,
-                 replicate_outputs: Optional[bool] = None):
+                 replicate_outputs: Optional[bool] = None,
+                 pool: Optional[BufferPool] = None):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
         self.compiled = compiled
@@ -199,8 +338,12 @@ class ProgramExecutor:
         self._units = [_UnitState(u) for u in compiled.units]
         for u in self._units:
             u.plan = self._plan_for(u)
-        self._scratch: dict = {}          # (unit_idx, bucket) -> slot entry
+        # host staging: private ring pool by default, or a shared pool
+        # handed in by pipeline_group (same entries serve every member)
+        self.pool = pool or BufferPool(n_slots=max(2, depth + 1))
+        self._pool_tag = object()         # private-pool key namespace
         self._slots_packed: list = []     # slots the current dispatch used
+        self._txn: Optional[TransferBatch] = None   # wave-coalesced puts
         self._inflight: deque = deque()
         self._steps = 0
         self.stats = {"steps": 0, "table_stacks": 0, "table_restacks": 0,
@@ -332,37 +475,17 @@ class ProgramExecutor:
     # ------------------------------------------------------------------
 
     def _scratch_for(self, unit_idx: int, bucket: tuple, spec: dict):
-        """Rotating host scratch slots per (unit, shape bucket).
-
-        Each slot remembers the :class:`StepHandle` that last packed it
-        (recorded by :meth:`submit`); before a slot is reused, that owner is
-        drained if still unresolved — packing step N+k never races an
-        in-flight transfer, regardless of how ``submit`` and ``step`` calls
-        interleave.  ``depth + 1`` slots (min 2) keep the steady-state
-        pipeline from ever hitting that drain: with exactly ``depth`` slots
-        a full pipeline reuses the oldest in-flight step's slot mid-submit
-        and stalls there instead of at the cheap backpressure pop — the
-        small-step-count overlap regression.
-        """
-        key = (unit_idx, bucket)
-        entry = self._scratch.get(key)
-        if entry is None:
-            n_slots = max(2, self.depth + 1)
-            entry = {"slots": [
-                {k: np.zeros(shape, dt) for k, (shape, dt) in spec.items()}
-                for _ in range(n_slots)],
-                "owners": [None] * n_slots, "turn": 0, "uses": 0}
-            self._scratch[key] = entry
-            self.stats["marshal_misses"] += 1
-        else:
-            self.stats["marshal_hits"] += 1
-        entry["uses"] += 1
-        turn = (entry["turn"] + 1) % len(entry["slots"])
-        entry["turn"] = turn
-        owner = entry["owners"][turn]
-        if owner is not None and not owner.done:
-            owner.result()            # slot still in flight: drain it first
-        entry["owners"][turn] = None
+        """Rotating host scratch per (unit, shape bucket), drawn from the
+        executor's :class:`BufferPool` (``depth + 1`` slots min 2 keep the
+        steady-state private pipeline from ever stalling on a busy slot; a
+        shared pool grows its ring instead — see :class:`BufferPool`).
+        Slot-owner accounting (recorded by :meth:`submit`) guarantees
+        packing step N+k never races an in-flight transfer, regardless of
+        how ``submit`` and ``step`` calls interleave across the programs
+        sharing the pool."""
+        key = self.pool.key_for((self._pool_tag, unit_idx), bucket, spec)
+        entry, turn, created = self.pool.acquire(key, spec)
+        self.stats["marshal_misses" if created else "marshal_hits"] += 1
         self._slots_packed.append((entry, turn))
         return entry["slots"][turn]
 
@@ -637,6 +760,40 @@ class ProgramExecutor:
         return bp.execute(u.res, ins, interpret=self.interpret,
                           max_lookups=ml)
 
+    def _txn_defer(self, outs: dict, dev: dict, run) -> None:
+        """Stage a gather-kind unit's per-step host arrays on the wave's
+        :class:`TransferBatch` and defer its dispatch to the batched flush
+        (device-resident values ride through untouched).  ``run`` must be a
+        *stable* (cached per unit) pure function of the device inputs — the
+        pipeline group traces the wave's runs into one jitted executable
+        and reuses it across waves keyed on those function identities."""
+        txn = self._txn
+        staged = {k: txn.put(v) if isinstance(v, np.ndarray) else v
+                  for k, v in dev.items()}
+        txn.defer(outs, run, staged)
+
+    def _unit_run(self, u: _UnitState):
+        """The unit's deferred-dispatch function (memoized on the unit so
+        jitted wave executables can be cached on its identity)."""
+        run = getattr(u, "txn_run", None)
+        if run is not None:
+            return run
+        if u.group is None:
+            name, op = u.unit.names[0], u.res.op
+
+            def run(d):
+                return {name: bj.execute(op, d)}
+        else:
+            members = tuple(zip(u.group.members, u.group.member_ops,
+                                u.group.seg_offsets))
+
+            def run(d, u=u, members=members):
+                fused = self._execute(u, d, None)
+                return {name: fused[off:off + mop.num_segments]
+                        for name, mop, off in members}
+        u.txn_run = run
+        return run
+
     def _dispatch(self, inputs: dict) -> dict:
         outs: dict = {}
         for idx, u in enumerate(self._units):
@@ -655,6 +812,15 @@ class ProgramExecutor:
                     name = u.unit.names[0]
                     key = "x" if u.res.op.kind == "fusedmm" else "table"
                     ins = {**inputs[name], key: u.table}
+                    if self._txn is not None and \
+                            u.res.op.kind in ("gather", "kg"):
+                        # CSR-kind jax units derive segment ids on the host
+                        # from these streams — only pure-device gathers ride
+                        # the batched transfer
+                        norm = {k: v if isinstance(v, jax.Array)
+                                else np.asarray(v) for k, v in ins.items()}
+                        self._txn_defer(outs, norm, self._unit_run(u))
+                        continue
                     outs[name] = bj.execute(u.res.op, ins)
                     continue
                 dev, ml = self._marshal_single(idx, u, inputs)
@@ -666,6 +832,9 @@ class ProgramExecutor:
                          else self._run_csr_sharded(idx, u, inputs))
             elif u.group.op.kind == "gather":
                 dev, ml = self._marshal_gather(idx, u, inputs)
+                if self._txn is not None and self.backend == "jax":
+                    self._txn_defer(outs, dev, self._unit_run(u))
+                    continue
                 fused = self._execute(u, dev, ml)
             else:
                 dev, ml = self._marshal_csr(idx, u, inputs)
@@ -675,15 +844,26 @@ class ProgramExecutor:
                 outs[name] = fused[off:off + mop.num_segments]
         return outs
 
-    def submit(self, inputs: dict) -> StepHandle:
+    def submit(self, inputs: dict, txn: Optional[TransferBatch] = None
+               ) -> StepHandle:
         """Dispatch one step asynchronously: marshal + launch now, block
         never.  At ``depth`` steps in flight the oldest is drained first
         (backpressure), so step N+1's access stream is prepared while step
-        N's execute phase runs — the cross-step DAE overlap."""
+        N's execute phase runs — the cross-step DAE overlap.
+
+        With ``txn`` (:meth:`PipelineGroup.submit_wave`), gather-kind units
+        stage their streams on the shared :class:`TransferBatch` and their
+        dispatch is deferred to its flush; the handle's outputs materialize
+        then.  Sharded executors route their own exchange and ignore it."""
         while len(self._inflight) >= self.depth:
             self._inflight.popleft().result()
         self._slots_packed = []
-        h = StepHandle(self._dispatch(inputs), self._steps)
+        self._txn = txn if self.shards == 1 else None
+        try:
+            outs = self._dispatch(inputs)
+        finally:
+            self._txn = None
+        h = StepHandle(outs, self._steps)
         for entry, turn in self._slots_packed:
             entry["owners"][turn] = h     # slot busy until h resolves
         self._steps += 1
@@ -710,6 +890,12 @@ class ProgramExecutor:
     def drain(self) -> None:
         while self._inflight:
             self._inflight.popleft().result()
+
+    def use_pool(self, pool: BufferPool) -> None:
+        """Re-home host staging onto ``pool`` (the pipeline-group join).
+        Slots of the old pool still owned by in-flight handles stay alive
+        through those handles; new marshals draw from the shared rings."""
+        self.pool = pool
 
     def access_plan_stats(self) -> dict:
         """The compiled access side, observable: per-plan hot/cold layout,
@@ -753,6 +939,198 @@ class ProgramExecutor:
                 r.duration_s for r in self.compiled.pass_records()
                 if r.name == "plan-access" and r.ran), 6),
         }
+
+
+# ---------------------------------------------------------------------------
+# Pipeline group: two (or more) compiled programs overlapped through one
+# shared staging pool — cross-PROGRAM access/execute overlap.
+# ---------------------------------------------------------------------------
+
+class PipelineGroup:
+    """Cross-program pipelining over a shared :class:`BufferPool`.
+
+    :meth:`ProgramExecutor.submit` already overlaps step N+1's access-side
+    marshal with step N's execute *within* one program.  A serving wave is
+    two programs back to back — the decode embed of wave W+1 and the MoE
+    un-dispatch of wave W — and running them through separate executors
+    serializes at each program's own backpressure.  The group re-homes every
+    member onto one shared pool (entries keyed by buffer-spec signature, so
+    same-shaped staging is one ring) and accounts in-flight steps per
+    program, so program A's marshal proceeds while program B executes.
+
+    ``depth`` is the group-level backpressure bound (default: the sum of
+    the members' depths — members throttle themselves first; pass a smaller
+    value to cap total in-flight work across programs)."""
+
+    def __init__(self, executors, names=None, depth: Optional[int] = None,
+                 n_slots: Optional[int] = None,
+                 max_slots: Optional[int] = None):
+        assert executors, "pipeline_group needs at least one executor"
+        self.executors = list(executors)
+        self.names = list(names) if names is not None else [
+            ex.compiled.program.name for ex in self.executors]
+        assert len(set(self.names)) == len(self.names), \
+            f"ambiguous program names: {self.names}"
+        self._by_name = dict(zip(self.names, self.executors))
+        slots = n_slots or max(max(2, ex.depth + 1)
+                               for ex in self.executors)
+        self.pool = BufferPool(n_slots=slots, max_slots=max_slots,
+                               shared=True)
+        for ex in self.executors:
+            ex.drain()                  # old-pool slots settle before rehome
+            ex.use_pool(self.pool)
+        self.depth = depth or sum(ex.depth for ex in self.executors)
+        self._inflight: deque = deque()   # (name, StepHandle)
+        self._wave_fns: dict = {}         # wave signature -> jitted fn
+        self.stats = {
+            "submitted": {n: 0 for n in self.names},
+            "in_flight": {n: 0 for n in self.names},
+            "max_in_flight": {n: 0 for n in self.names},
+            "group_drains": 0,
+            "waves": 0,
+            "batched_arrays": 0,
+        }
+
+    def executor(self, name: str) -> ProgramExecutor:
+        return self._by_name[name]
+
+    def _gc(self) -> None:
+        """Drop handles resolved elsewhere (member backpressure, caller
+        ``result()``) from the group ledger."""
+        live: deque = deque()
+        for n, h in self._inflight:
+            if h.done:
+                self.stats["in_flight"][n] -= 1
+            else:
+                live.append((n, h))
+        self._inflight = live
+
+    def submit(self, name: str, inputs: dict) -> StepHandle:
+        """Dispatch one step of member ``name`` asynchronously, under both
+        the member's own depth bound and the group bound."""
+        self._gc()
+        while len(self._inflight) >= self.depth:
+            n0, h0 = self._inflight.popleft()
+            h0.result()
+            self.stats["in_flight"][n0] -= 1
+            self.stats["group_drains"] += 1
+        h = self._by_name[name].submit(inputs)
+        self._inflight.append((name, h))
+        st = self.stats
+        st["submitted"][name] += 1
+        st["in_flight"][name] += 1
+        st["max_in_flight"][name] = max(st["max_in_flight"][name],
+                                        st["in_flight"][name])
+        return h
+
+    def step(self, name: str, inputs: dict) -> dict:
+        """Synchronous convenience: group submit + block on the result."""
+        return self.submit(name, inputs).result()
+
+    def submit_wave(self, wave: dict) -> dict:
+        """Submit one serving wave — ``{program name: inputs}`` — across
+        members as ONE co-scheduled dispatch: every member marshals its
+        access streams onto a shared :class:`TransferBatch`, one batched
+        ``jax.device_put`` ships them all, and the members' deferred unit
+        dispatches are traced into a single jitted wave executable (cached
+        on the wave's unit/shape signature, so steady-state waves never
+        retrace).  Returns ``{name: StepHandle}``."""
+        self._gc()
+        while len(self._inflight) > max(0, self.depth - len(wave)):
+            n0, h0 = self._inflight.popleft()
+            h0.result()
+            self.stats["in_flight"][n0] -= 1
+            self.stats["group_drains"] += 1
+        txn = TransferBatch()
+        handles = {}
+        for name, inputs in wave.items():
+            handles[name] = self._by_name[name].submit(inputs, txn=txn)
+        self._flush_wave(txn)
+        st = self.stats
+        st["waves"] += 1
+        st["batched_arrays"] += txn.n_arrays
+        for name, h in handles.items():
+            self._inflight.append((name, h))
+            st["submitted"][name] += 1
+            st["in_flight"][name] += 1
+            st["max_in_flight"][name] = max(st["max_in_flight"][name],
+                                            st["in_flight"][name])
+        return handles
+
+    def _flush_wave(self, txn: TransferBatch) -> None:
+        """Flush the wave's deferred dispatches through one jitted wave
+        executable.  The trace closes over nothing: device-resident
+        constants (stacked tables, fused row offsets) and the batched
+        per-wave streams are both arguments, so a table rebind is just a
+        different argument and the cache key only carries unit identities
+        and array shapes."""
+        if not txn.fills:
+            txn.flush()                   # nothing deferred: transfers only
+            return
+        host, txn._host = txn._host, []
+        fills, txn.fills = txn.fills, []
+        consts: list = []
+        plan: list = []
+        for _, _, staged in fills:
+            spec = []
+            for k, v in staged.items():
+                if isinstance(v, _TxnRef):
+                    spec.append((k, True, v.i))
+                else:
+                    spec.append((k, False, len(consts)))
+                    consts.append(v)
+            plan.append(tuple(spec))
+        key = (tuple(run for _, run, _ in fills), tuple(plan),
+               tuple((a.shape, a.dtype.str) for a in host),
+               tuple((tuple(c.shape), str(c.dtype)) for c in consts))
+        fn = self._wave_fns.get(key)
+        if fn is None:
+            runs = [run for _, run, _ in fills]
+            splan = tuple(plan)
+
+            def wave_fn(consts, devs):
+                return [run({k: devs[i] if is_dev else consts[i]
+                             for k, is_dev, i in spec})
+                        for run, spec in zip(runs, splan)]
+            fn = jax.jit(wave_fn)
+            self._wave_fns[key] = fn
+        devs = jax.device_put(host) if host else []
+        for (outs, _, _), res in zip(fills, fn(consts, devs)):
+            outs.update(res)
+
+    def drain(self) -> None:
+        for ex in self.executors:
+            ex.drain()
+        for n, h in self._inflight:
+            h.result()
+        self._gc()
+
+    def group_stats(self) -> dict:
+        """Per-program in-flight accounting + the shared pool's counters
+        (what benchmarks/run.py surfaces)."""
+        self._gc()
+        return {
+            "programs": list(self.names),
+            "depth": self.depth,
+            "submitted": dict(self.stats["submitted"]),
+            "in_flight": dict(self.stats["in_flight"]),
+            "max_in_flight": dict(self.stats["max_in_flight"]),
+            "group_drains": self.stats["group_drains"],
+            "waves": self.stats["waves"],
+            "batched_arrays": self.stats["batched_arrays"],
+            "pool": dict(self.pool.stats),
+        }
+
+
+def pipeline_group(executors, names=None, depth: Optional[int] = None,
+                   n_slots: Optional[int] = None,
+                   max_slots: Optional[int] = None) -> PipelineGroup:
+    """Join ``executors`` into a :class:`PipelineGroup` sharing one staging
+    pool: ``group.submit("decode-embed", ...)`` marshals wave W+1's embed
+    stream while ``"moe-undispatch"``'s wave-W execute is still in flight.
+    ``names`` defaults to each executor's program name."""
+    return PipelineGroup(executors, names=names, depth=depth,
+                         n_slots=n_slots, max_slots=max_slots)
 
 
 # ---------------------------------------------------------------------------

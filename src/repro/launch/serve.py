@@ -21,21 +21,31 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="cross-program pipelining: feed each wave's "
+                         "access streams through the PipelineGroup")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     srv = DecodeServer(lm, params, batch_slots=args.slots,
-                       max_len=args.max_len)
+                       max_len=args.max_len,
+                       prefill_chunk=args.prefill_chunk,
+                       pipeline=args.pipeline)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8).astype(
         np.int32), max_new_tokens=16) for _ in range(args.requests)]
     for r in reqs:
         srv.submit(r)
     steps = srv.run_until_drained()
-    print(f"served {len(reqs)} requests in {steps} decode steps; "
+    print(f"served {len(reqs)} requests in {steps} serving iterations; "
           f"all done={all(r.done for r in reqs)}")
+    print("serve_stats:", srv.serve_stats)
+    if srv.pipeline_group is not None:
+        print("pipeline_group:",
+              srv.compile_stats.get("pipeline_group", {}))
 
 
 if __name__ == "__main__":

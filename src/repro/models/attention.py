@@ -128,18 +128,21 @@ def blockwise_attention(q, k, v, *, causal: bool = True,
 
 def decode_attention(q, k_cache, v_cache, cache_len, *,
                      window: Optional[int] = None):
-    """q (B,1,H,D); caches (B,Smax,Hkv,D); cache_len scalar (incl. new tok)."""
+    """q (B,1,H,D); caches (B,Smax,Hkv,D); cache_len (B,) per-slot valid
+    lengths incl. the new token (a scalar — legacy whole-batch caches —
+    broadcasts to the same math)."""
     b, _, h, d = q.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv
     qg = q.reshape(b, 1, hkv, g, d)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
                    preferred_element_type=jnp.float32) * d ** -0.5
+    cl = jnp.broadcast_to(cache_len, (b,))
     pos = jnp.arange(smax)
-    mask = pos < cache_len
+    mask = pos[None, :] < cl[:, None]
     if window is not None:
-        mask &= pos >= cache_len - window
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask &= pos[None, :] >= cl[:, None] - window
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -183,40 +186,56 @@ def attn_forward(p, x, cfg: ModelConfig, *, positions, causal=True,
     return o.reshape(b, s, h * hd) @ p["wo"]
 
 
+def slot_update(cache, new, pos):
+    """Per-slot cache write: ``cache`` (B,S,...), ``new`` (B,1,...) rows land
+    at each slot's own position ``pos`` (B,) — the vmapped analogue of the
+    single shared-position ``dynamic_update_slice`` that continuous batching
+    needs once every slot carries its own counter."""
+    zeros = (0,) * (cache.ndim - 2)
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p,) + zeros)
+    )(cache, new, pos)
+
+
 def attn_decode(p, x, cfg: ModelConfig, cache, *, window=None):
-    """x (B,1,D); cache dict {k,v:(B,Smax,Hkv,hd), len: scalar} (self-attn)."""
+    """x (B,1,D); cache dict {k,v:(B,Smax,Hkv,hd), len:(B,) per-slot
+    position counters} (self-attn).  A scalar ``len`` (legacy whole-batch
+    caches) broadcasts through the same per-slot path bit-identically."""
     b = x.shape[0]
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    pos = cache["len"]
+    pos = jnp.broadcast_to(cache["len"], (b,))
     q = (x @ p["wq"]).reshape(b, 1, h, hd)
     k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
     v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
-    cos, sin = rope_freqs(pos[None, None].astype(jnp.float32), hd,
+    cos, sin = rope_freqs(pos[:, None].astype(jnp.float32), hd,
                           cfg.rope_theta, cfg.rotary_pct)
     q = apply_rope(q, cos, sin, cfg.rotary_pct)
     k = apply_rope(k, cos, sin, cfg.rotary_pct)
     if "k_scale" in cache:   # int8 quantized cache
         kq, ks = _quant_kv(k)
         vq, vs = _quant_kv(v)
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
-        ks_c = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, pos, 0))
-        vs_c = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, pos, 0))
+        k_cache = slot_update(cache["k"], kq, pos)
+        v_cache = slot_update(cache["v"], vq, pos)
+        ks_c = slot_update(cache["k_scale"], ks, pos)
+        vs_c = slot_update(cache["v_scale"], vs, pos)
         kd = _dequant_kv(k_cache, ks_c, x.dtype)
         vd = _dequant_kv(v_cache, vs_c, x.dtype)
         o = decode_attention(q, kd, vd, pos + 1, window=window)
         new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_c,
-                     "v_scale": vs_c, "len": pos + 1}
+                     "v_scale": vs_c, "len": cache["len"] + 1}
         return o.reshape(b, 1, h * hd) @ p["wo"], new_cache
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    k_cache = slot_update(cache["k"], k, pos)
+    v_cache = slot_update(cache["v"], v, pos)
     o = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
-    new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+    new_cache = {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}
     return o.reshape(b, 1, h * hd) @ p["wo"], new_cache
 
 
 def init_kv_cache(cfg: ModelConfig, batch, max_len, dtype):
     hkv, hd = cfg.num_kv_heads, cfg.hd
+    # ``len`` is per-slot: each batch slot carries its own position counter
+    # so the serving loop can admit/retire requests slot-by-slot (true
+    # continuous batching) instead of draining whole waves
     if cfg.kv_cache_dtype == "int8":
         # beyond-paper serving optimization: per-(token, head) block-scaled
         # int8 KV — halves-to-quarters the decode memory term (§Perf)
@@ -224,10 +243,10 @@ def init_kv_cache(cfg: ModelConfig, batch, max_len, dtype):
                 "v": jnp.zeros((batch, max_len, hkv, hd), jnp.int8),
                 "k_scale": jnp.zeros((batch, max_len, hkv), jnp.float32),
                 "v_scale": jnp.zeros((batch, max_len, hkv), jnp.float32),
-                "len": jnp.array(0, jnp.int32)}
+                "len": jnp.zeros((batch,), jnp.int32)}
     return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
             "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
-            "len": jnp.array(0, jnp.int32)}
+            "len": jnp.zeros((batch,), jnp.int32)}
 
 
 def _quant_kv(x):
@@ -286,34 +305,32 @@ def mla_decode(p, x, cfg: ModelConfig, cache):
     memory reduction that makes deepseek decode_32k fit."""
     b = x.shape[0]
     h, hd, rd, r = cfg.num_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora_rank
-    pos = cache["len"]
+    pos = jnp.broadcast_to(cache["len"], (b,))
     q = (x @ p["wq"]).reshape(b, 1, h, hd + rd)
     qn, qr = q[..., :hd], q[..., hd:]
     c = x @ p["w_dkv"]
     kr = (x @ p["w_kr"]).reshape(b, 1, 1, rd)
-    cos, sin = rope_freqs(pos[None, None].astype(jnp.float32), rd,
+    cos, sin = rope_freqs(pos[:, None].astype(jnp.float32), rd,
                           cfg.rope_theta)
     qr = apply_rope(qr, cos, sin)
     kr = apply_rope(kr, cos, sin)
-    c_cache = jax.lax.dynamic_update_slice(cache["c"], c.reshape(b, 1, r),
-                                           (0, pos, 0))
-    kr_cache = jax.lax.dynamic_update_slice(cache["kr"], kr.reshape(b, 1, rd),
-                                            (0, pos, 0))
+    c_cache = slot_update(cache["c"], c.reshape(b, 1, r), pos)
+    kr_cache = slot_update(cache["kr"], kr.reshape(b, 1, rd), pos)
     # absorbed attention: score = qn·(c W_uk) + qr·kr
     kn = jnp.einsum("bsr,rhd->bshd", c_cache,
                     p["w_uk"].reshape(r, h, hd))
     sc = (jnp.einsum("bqhd,bshd->bhqs", qn, kn) +
           jnp.einsum("bqhd,bsd->bhqs", qr, kr_cache)) * (hd + rd) ** -0.5
-    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos
-    sc = jnp.where(mask[None, None, :, :][..., 0, :], sc, NEG_INF)
+    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos[:, None]
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
     pr = jax.nn.softmax(sc.astype(jnp.float32), axis=-1)
     v = jnp.einsum("bsr,rhd->bshd", c_cache, p["w_uv"].reshape(r, h, hd))
     o = jnp.einsum("bhqs,bshd->bqhd", pr.astype(v.dtype), v)
-    new_cache = {"c": c_cache, "kr": kr_cache, "len": pos + 1}
+    new_cache = {"c": c_cache, "kr": kr_cache, "len": cache["len"] + 1}
     return o.reshape(b, 1, h * hd) @ p["wo"], new_cache
 
 
 def init_mla_cache(cfg: ModelConfig, batch, max_len, dtype):
     return {"c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
             "kr": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
-            "len": jnp.array(0, jnp.int32)}
+            "len": jnp.zeros((batch,), jnp.int32)}

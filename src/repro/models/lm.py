@@ -253,6 +253,40 @@ class LM:
             vocab_size=cfg.padded_vocab, d_model=cfg.d_model, tokens=tokens,
             extra_ops=tuple(extra), name=f"{cfg.name}-step")
 
+    def decode_embed_program(self, batch: int, seq: int = 1):
+        """The *embed side* of one decode wave as its own program (token
+        embed + label gather over the shared table, no MoE op) — the first
+        member of the serving pipeline group.  Splitting the wave's lookups
+        into two compiled programs is what lets wave W+1's embed marshal
+        overlap wave W's MoE un-dispatch execute."""
+        cfg = self.cfg
+        return ee.model_embedding_program(
+            vocab_size=cfg.padded_vocab, d_model=cfg.d_model,
+            tokens=batch * seq, name=f"{cfg.name}-decode-embed")
+
+    def embedding_pipeline(self, batch: int, seq: int = 1,
+                           opt_level: str = "O3", depth: int = 2,
+                           **kw):
+        """The serving :class:`~repro.core.executor.PipelineGroup`: the
+        decode-embed program plus (for MoE models) the un-dispatch program,
+        joined over one shared staging pool.  Non-MoE models get a
+        single-member group (same API, no second program to overlap).
+
+        Defaults to the jax backend: that is the path whose gather
+        dispatches ride ``submit_wave``'s coalesced transfer + jitted wave
+        executable (differential-tested identical to pallas)."""
+        from ..core.executor import executor_for, pipeline_group
+        kw.setdefault("backend", "jax")
+        cfg = self.cfg
+        members = [executor_for(self.decode_embed_program(batch, seq),
+                                opt_level, depth=depth, **kw)]
+        pattern = tuple(cfg.block_pattern) + tuple(cfg.remainder_pattern)
+        if cfg.num_experts and any(k in ("moe", "mla") for k in pattern):
+            members.append(executor_for(
+                moe_mod.undispatch_program(cfg, batch * seq), opt_level,
+                depth=depth, **kw))
+        return pipeline_group(members)
+
     def compile_embeddings(self, batch: int, seq: int,
                            opt_level: str = "O3"):
         """Compile this model's embedding program (compile-cache backed)."""
@@ -472,10 +506,21 @@ class LM:
         x, _ = self.forward(params, batch)
         return x[:, -1:]
 
-    def decode_step(self, params, tokens_new, caches, batch_ctx=None):
-        """tokens_new (B,1) -> (logits (B,1,V-sharded…), caches)."""
+    def decode_step(self, params, tokens_new, caches, batch_ctx=None,
+                    active=None):
+        """tokens_new (B,1) -> (logits (B,1,V-sharded…), caches).
+
+        ``active`` (B,) bool masks the continuous-batching batch: inactive
+        slots feed a zero token and keep their caches (incl. the per-slot
+        ``len`` counter) bit-identical — the property that makes
+        prompt-chunked prefill equal whole-prompt prefill regardless of how
+        a wave's slots are staggered."""
         cfg = self.cfg
         sh = self.shard
+        if active is not None:
+            # zero the fed token so inactive slots contribute a deterministic
+            # input to batch-coupled ops (MoE capacity contention)
+            tokens_new = jnp.where(active[:, None], tokens_new, 0)
         if sh.mesh is not None and sh.use_shard_map_embed:
             x = ee.lookup(params["embed"], tokens_new, mesh=sh.mesh,
                           vocab_axis=sh.model_axis,
@@ -488,13 +533,21 @@ class LM:
             ctx["enc_out"] = batch_ctx["enc_out"]
         pattern = cfg.block_pattern
 
+        def keep_old(old, new):
+            if active is None:
+                return new
+            return jax.tree.map(
+                lambda o, n: jnp.where(
+                    active.reshape((active.shape[0],) + (1,) * (n.ndim - 1)),
+                    n, o), old, new)
+
         def super_step(h, xs):
             layer_params, layer_cache = xs
             new_caches = []
             for i, kind in enumerate(pattern):
                 h, nc = block_decode(kind, layer_params[i], h, cfg,
                                      layer_cache[i], ctx)
-                new_caches.append(nc)
+                new_caches.append(keep_old(layer_cache[i], nc))
             return h, tuple(new_caches)
 
         if cfg.n_super:
@@ -507,7 +560,55 @@ class LM:
         for i, kind in enumerate(cfg.remainder_pattern):
             x, nc = block_decode(kind, params["rest"][i], x, cfg,
                                  caches["rest"][i], ctx)
-            new_rest.append(nc)
+            new_rest.append(keep_old(caches["rest"][i], nc))
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = ee.logits(x, params["embed"])[..., :cfg.vocab_size]
         return logits, {"scan": new_scan, "rest": tuple(new_rest)}
+
+    def wave_step(self, params, tokens, lens, caches, batch_ctx=None):
+        """One serving *wave*: a fused ``lax.scan`` of ``tokens.shape[1]``
+        masked decode micro-steps.  ``tokens`` (B,C) ragged-right with
+        per-slot valid counts ``lens`` (B,); slot b consumes
+        ``tokens[b, :lens[b]]`` and idles (caches untouched) afterwards.
+
+        Because each micro-step is exactly :meth:`decode_step` with the
+        ``active = t < lens`` mask, splitting a prompt across waves of any
+        chunk size replays the *same* micro-step sequence as one big wave —
+        prompt-chunked prefill is bit-identical to whole-prompt prefill.
+
+        Returns ``(logits (B,1,V) at each slot's last valid token, caches)``.
+        """
+        b, c = tokens.shape
+        lens = lens.astype(jnp.int32)
+
+        def micro(carry, xs):
+            caches, logits_last = carry
+            tok, t = xs
+            active = t < lens
+            logits, caches = self.decode_step(params, tok[:, None], caches,
+                                              batch_ctx=batch_ctx,
+                                              active=active)
+            logits_last = jnp.where(active[:, None, None], logits,
+                                    logits_last)
+            return (caches, logits_last), None
+
+        init = (caches,
+                jnp.zeros((b, 1, self.cfg.vocab_size), jnp.float32))
+        (caches, logits_last), _ = jax.lax.scan(
+            micro, init, (tokens.T, jnp.arange(c, dtype=jnp.int32)))
+        return logits_last, caches
+
+    def reset_slots(self, caches, keep):
+        """Zero the cache state of retired slots (``keep`` (B,) bool) so a
+        recycled slot starts from position 0 with no stale KV.  Scan-stacked
+        leaves carry batch at axis 1 (leading axis is n_super), ``rest``
+        leaves at axis 0."""
+        def mask_at(axis):
+            def f(leaf):
+                shape = [1] * leaf.ndim
+                shape[axis] = keep.shape[0]
+                return jnp.where(keep.reshape(shape), leaf,
+                                 jnp.zeros_like(leaf))
+            return f
+        return {"scan": jax.tree.map(mask_at(1), caches["scan"]),
+                "rest": jax.tree.map(mask_at(0), caches["rest"])}

@@ -38,6 +38,17 @@ def dispatch_op(cfg: ModelConfig, tokens: int) -> EmbeddingOp:
                        num_embeddings=e * capacity, emb_len=cfg.d_model)
 
 
+def undispatch_program(cfg: ModelConfig, tokens: int, name=None):
+    """The MoE un-dispatch as a standalone one-op
+    :class:`~repro.core.ops.EmbeddingProgram` — the second member of the
+    serving :func:`~repro.core.executor.pipeline_group`: wave W's expert
+    outputs gather back to token order while wave W+1's decode embed
+    marshals against the shared staging pool."""
+    from ..core.ops import EmbeddingProgram
+    return EmbeddingProgram(name or f"{cfg.name}-moe-undispatch",
+                            (("moe_undispatch", dispatch_op(cfg, tokens)),))
+
+
 def init_moe(key, cfg: ModelConfig, dtype):
     d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
     ks = jax.random.split(key, 5)
