@@ -16,14 +16,46 @@ Three callers used to hand-roll the same two tricks (``bench_sharded``,
   Children verify with :func:`require_devices` and print
   ``MESH_SKIP <have> <want>`` so the parent can tell "environment can't"
   from "code broke" (``tests/conftest.py`` turns it into a pytest skip).
+* **retry transient spawns** — a loaded CI host can transiently fail the
+  fork/exec itself (``OSError``: EAGAIN, resource limits) or OOM-kill the
+  child before it runs a line.  :func:`run_with_spawn_retry` retries
+  exactly those infra failures with exponential backoff; an ordinary
+  nonzero exit (a real test failure) is NEVER retried — it must surface
+  on the first run.
 """
 from __future__ import annotations
 
 import os
 import subprocess
 import sys
+import time
 
 MESH_SKIP = "MESH_SKIP"
+
+
+def run_with_spawn_retry(cmd, *, attempts: int = 3, backoff_s: float = 0.5,
+                         sleep=time.sleep, **kw):
+    """``subprocess.run`` with bounded retry on *spawn/infra* failures
+    only: an ``OSError`` raised by the spawn itself, or a child killed by
+    a signal (negative returncode — the OOM-killer / a stray SIGKILL,
+    not a test outcome).  Ordinary nonzero exits return immediately.
+    Returns the last ``CompletedProcess`` (or re-raises the last
+    ``OSError`` when every attempt failed to spawn)."""
+    last_exc = None
+    result = None
+    for k in range(attempts):
+        if k:
+            sleep(backoff_s * (2 ** (k - 1)))
+        try:
+            result = subprocess.run(cmd, **kw)
+        except OSError as e:
+            last_exc = e
+            continue
+        if result.returncode >= 0:
+            return result
+    if result is not None:
+        return result
+    raise last_exc
 
 
 def forced_device_env(n: int, base: dict = None) -> dict:
@@ -42,8 +74,10 @@ def respawn_with_devices(n: int) -> int:
     """Run this script again in a child process with an n-device CPU
     platform forced via its (copied) environment; returns the exit code.
     The forced ``XLA_FLAGS`` / device count never leak into the calling
-    process's environment or its later jax import."""
-    return subprocess.run(
+    process's environment or its later jax import.  Transient spawn
+    failures (fork/exec errors, a signal-killed child) retry with backoff
+    — see :func:`run_with_spawn_retry`."""
+    return run_with_spawn_retry(
         [sys.executable, sys.argv[0], *sys.argv[1:], "--no-respawn"],
         env=forced_device_env(n)).returncode
 

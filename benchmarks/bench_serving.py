@@ -10,7 +10,12 @@ Two measurements:
   latency, and generated tokens/sec at each point.  The server runs with
   ``pipeline=True``: every wave's access streams feed the
   :class:`~repro.core.executor.PipelineGroup` whose per-program in-flight
-  and pool hit/miss counters land in the record.
+  and pool hit/miss counters land in the record.  The measured points run
+  with SLO admission armed at a generous budget (so ``shed_rate`` is 0.0
+  unless the server regresses — gated absolutely in CI), and a 16x
+  **overload** point with a tight budget asserts the server sheds the
+  excess instead of queueing it unboundedly while every request still
+  reaches a terminal status.
 
 * **Cross-program pipeline ablation** — at saturating load (back-to-back
   waves), the wave's two compiled programs (decode embed + MoE un-dispatch)
@@ -46,7 +51,7 @@ def _percentiles(xs, scale=1e3) -> dict:
 
 
 def _workload(cfg, n: int, seed: int, *, max_new: int, len_lo: int,
-              len_hi: int):
+              len_hi: int, deadline_s=None):
     """n requests with Zipf-distributed token ids and mixed prompt/output
     lengths (deterministic per seed so every run serves the same work)."""
     from repro.runtime.server import Request
@@ -58,7 +63,8 @@ def _workload(cfg, n: int, seed: int, *, max_new: int, len_lo: int,
                   % cfg.vocab_size).astype(np.int32)
         reqs.append(Request(prompt=prompt,
                             max_new_tokens=int(rng.integers(
-                                max(1, max_new // 2), max_new + 1))))
+                                max(1, max_new // 2), max_new + 1)),
+                            deadline_s=deadline_s))
     return reqs
 
 
@@ -67,7 +73,15 @@ def _serve_metrics(reqs, makespan: float) -> dict:
     gaps = np.concatenate([np.diff(r.token_times) for r in reqs
                            if len(r.token_times) > 1] or [np.zeros(0)])
     toks = sum(len(r.out) for r in reqs)
+    statuses = {s: sum(r.status == s for r in reqs)
+                for s in ("ok", "shed", "expired", "failed")}
+    # SLO losses (shed + expired) over all offered requests: the gated
+    # overload signal — a healthy server at the measured points sheds 0
+    shed_rate = (statuses["shed"] + statuses["expired"]) / max(1, len(reqs))
     return {"completed": sum(r.done for r in reqs),
+            "served_ok": statuses["ok"],
+            "statuses": statuses,
+            "shed_rate": round(shed_rate, 4),
             "generated_tokens": toks,
             "tokens_per_sec": round(toks / makespan, 1),
             "ttft_ms": _percentiles(ttft),
@@ -196,9 +210,10 @@ def run_serving(fast: bool) -> dict:
         slots, n_req, max_new, len_hi, max_len, chunk = 8, 40, 10, 16, 64, 4
         wave_batch, n_waves = 512, 20
 
-    def make_server():
+    def make_server(capacity=None, slo=None):
         return DecodeServer(lm, params, batch_slots=slots, max_len=max_len,
-                            prefill_chunk=chunk, pipeline=True)
+                            prefill_chunk=chunk, pipeline=True,
+                            capacity_rps=capacity, ttft_slo_s=slo)
 
     def fresh_reqs(seed):
         return _workload(cfg, n_req, seed, max_new=max_new, len_lo=2,
@@ -210,11 +225,40 @@ def run_serving(fast: bool) -> dict:
                                         len_lo=2, len_hi=len_hi))
     calib, _ = _closed_loop(make_server, fresh_reqs(0))
     capacity = max(calib["requests_per_sec"], 1e-3)
+    # SLO machinery armed at the measured points with a generous budget
+    # (2x the closed-loop time of the whole batch, so arrival + queueing
+    # jitter never approaches it): a healthy server records shed_rate 0.0
+    # here, and only a real slowdown makes the admission control start
+    # covering for it — which the abs gate on saturating.shed_rate trips
+    slo = 2.0 * n_req / capacity
     open_loop, last_srv = {}, None
     for point, mult in (("low", 0.5), ("saturating", 4.0)):
         open_loop[point], last_srv = _open_loop(
-            make_server, fresh_reqs(1), capacity * mult, seed=42)
+            lambda: make_server(capacity, slo), fresh_reqs(1),
+            capacity * mult, seed=42)
+        open_loop[point]["ttft_slo_s"] = round(slo, 4)
     assert open_loop["saturating"]["completed"] == n_req
+
+    # overload: 16x capacity under a tight budget — the server must shed
+    # or expire the excess instead of queueing it unboundedly, and every
+    # request still reaches a terminal status; requests that DID get a
+    # first token got it inside the budget (the mid-wave expiry check
+    # runs before tokens are emitted, on the same timestamp)
+    tight = 0.5 * n_req / capacity
+    over_reqs = fresh_reqs(2)
+    open_loop["overload"], _ = _open_loop(
+        lambda: make_server(capacity, tight), over_reqs,
+        capacity * 16.0, seed=43)
+    ov = open_loop["overload"]
+    ov["ttft_slo_s"] = round(tight, 4)
+    assert all(r.done for r in over_reqs), \
+        "overload left requests without a terminal status"
+    losses = ov["statuses"]["shed"] + ov["statuses"]["expired"]
+    assert losses > 0, \
+        f"16x overload shed nothing (statuses={ov['statuses']})"
+    assert ov["ttft_ms"]["p99"] <= (tight * 1.05 + 0.05) * 1e3, \
+        (f"overload TTFT p99 {ov['ttft_ms']['p99']}ms exceeds the "
+         f"{tight * 1e3:.0f}ms budget — admitted work queued past its SLO")
 
     pipe = _pipeline_ablation(lm, wave_batch, n_waves, fast)
     return {
@@ -241,6 +285,8 @@ def run(report, fast: bool = True, out_path: Path = DEFAULT_OUT) -> dict:
         report(f"serving/{point}_token_p99_ms",
                m["token_latency_ms"]["p99"] * 1e3,
                f"tok/s={m['tokens_per_sec']}")
+        report(f"serving/{point}_shed_rate", 0,
+               f"shed_rate={m['shed_rate']} statuses={m['statuses']}")
     pipe = rec["pipeline"]
     report("serving/pipeline_speedup", pipe["us_per_wave"]["pipelined"],
            pipe["speedup"])

@@ -38,8 +38,15 @@ if [[ "$FAST" == 1 ]]; then
   # exchange volume on the Zipf stream, refreshes BENCH_locality.json
   python benchmarks/bench_locality.py --fast
   # open-loop serving smoke: continuous-batching server under Poisson load
-  # at 2 QPS points + the cross-program pipeline ablation (asserts
-  # pipeline_group beats the sequential two-program baseline), refreshes
-  # BENCH_serving.json
+  # at 2 QPS points + a 16x overload point (asserts the SLO admission
+  # sheds instead of queueing unboundedly) + the cross-program pipeline
+  # ablation (asserts pipeline_group beats the sequential two-program
+  # baseline), refreshes BENCH_serving.json
   python benchmarks/bench_serving.py --fast
+  # chaos leg: the seeded fault-injection suite replayed under a pinned
+  # seed — per-site executor recovery, wave watchdog + bounded retry,
+  # hardening policies.  The full pytest above already ran it once with
+  # the default seed; this replay pins the probabilistic schedules.
+  CHAOS_SEED=7 python -m pytest -x -q -p no:cacheprovider --fast \
+    tests/test_faults.py
 fi

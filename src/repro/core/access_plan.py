@@ -57,6 +57,39 @@ from .capacity import DEFAULT_LATTICE, CapacityLattice
 from .ops import EmbeddingOp
 
 
+class EmberFault(RuntimeError):
+    """Base of the typed fault vocabulary.
+
+    Lives here (the lowest layer that raises one) so :mod:`core` never
+    imports :mod:`repro.runtime`; :mod:`repro.runtime.faults` is the
+    user-facing home that re-exports it alongside the runtime faults
+    (``InjectedFailure``, ``WaveTimeout``, ...)."""
+
+
+class MalformedAccessError(EmberFault, ValueError):
+    """An offset stream failed validation against its compiled
+    :class:`AccessPlan` — out-of-bounds indices under ``strict`` policy,
+    or structural damage (non-monotone ``ptrs``, stream-length mismatches,
+    extents past the capacity lattice's int32 address space) under *any*
+    policy.  Carries the op name and a machine-checkable ``reason``."""
+
+    def __init__(self, op_name, reason: str, detail: str = ""):
+        self.op_name = op_name
+        self.reason = reason
+        super().__init__(
+            f"malformed access stream for op {op_name!r}: {reason}"
+            + (f" ({detail})" if detail else ""))
+
+
+#: index-validation policies of the marshaling path (``strict`` raises a
+#: typed error; ``clamp``/``drop`` degrade per-lookup and count it)
+INDEX_POLICIES = ("strict", "clamp", "drop")
+
+#: the kernels address streams in int32 — a padded capacity bucket past
+#: this is un-marshalable regardless of policy (structural, always raises)
+_INT32_MAX = 2 ** 31 - 1
+
+
 def canonical_hot(hot_rows) -> tuple:
     """Hashable canonical form of a ``{op name: hot row ids}`` mapping —
     the compile-cache / executor-cache key component."""
@@ -191,6 +224,152 @@ class AccessPlan:
                 "hot_rows": self.hot_rows_total,
                 "hot_slab_bytes": self.hot_slab_bytes,
                 "local_rows": self.local_rows}
+
+    # ------------------------------------------------------------------
+    # Input hardening
+    # ------------------------------------------------------------------
+
+    def harden_step(self, inputs: dict, policy: str,
+                    fallback_name: Optional[str] = None) -> tuple:
+        """Validate (and, under ``clamp``/``drop``, repair) one step's
+        member streams against this plan before any marshaling path
+        interprets them.  Returns ``(inputs, oob, dropped)``.
+
+        * *Structural* damage — wrong stream lengths, non-monotone or
+          non-zero-based ``ptrs``, negative ``lens``, non-integer index
+          dtypes, an nnz whose padded capacity bucket leaves int32 — has
+          no graceful reading and raises :class:`MalformedAccessError`
+          under **every** policy.
+        * *Value* damage — indices outside the member's vocab bound
+          (``slots[m.slot].rows``) — raises under ``strict``; ``clamp``
+          clips to the valid range (counted in ``oob``); ``drop`` removes
+          the offending CSR entries (counted in ``dropped``; for
+          one-lookup-per-segment streams — gather/kg members — a segment
+          cannot be empty, so drop degrades to clamp and counts ``oob``).
+
+        The returned dict is the *same object* when every stream is clean
+        (the zero-copy fast path — marshaling is then bit-identical to an
+        unhardened executor); repaired members get shallow-copied entries.
+        """
+        assert policy in INDEX_POLICIES, (policy, INDEX_POLICIES)
+        out, oob, dropped = inputs, 0, 0
+        for m in self.members:
+            name = m.name if m.name is not None else fallback_name
+            ins = inputs[name]
+            new, o, d = self._harden_member(m, ins, policy, name)
+            oob += o
+            dropped += d
+            if new is not ins:
+                if out is inputs:
+                    out = dict(inputs)
+                out[name] = new
+        return out, oob, dropped
+
+    def _member_idxs(self, m: MemberPlan, ins: dict, name) -> np.ndarray:
+        idxs = np.asarray(ins["idxs"])
+        if idxs.ndim != 1:
+            raise MalformedAccessError(
+                name, "idxs must be 1-D", f"got shape {idxs.shape}")
+        if not np.issubdtype(idxs.dtype, np.integer):
+            raise MalformedAccessError(
+                name, "idxs must be an integer array",
+                f"got dtype {idxs.dtype}")
+        return idxs
+
+    def _harden_member(self, m: MemberPlan, ins: dict, policy: str,
+                       name) -> tuple:
+        rows = self.slots[m.slot].rows
+        idxs = self._member_idxs(m, ins, name)
+        if m.kind in ("gather", "kg"):
+            # one lookup per segment: the stream IS the segment axis
+            if len(idxs) != m.num_segments:
+                raise MalformedAccessError(
+                    name, "idxs length != num_segments",
+                    f"{len(idxs)} != {m.num_segments}")
+            vals = ins.get("vals")
+            if m.kind == "kg" and vals is not None \
+                    and len(np.asarray(vals)) != m.num_segments:
+                raise MalformedAccessError(
+                    name, "vals length != num_segments",
+                    f"{len(np.asarray(vals))} != {m.num_segments}")
+            bad = (idxs < 0) | (idxs >= rows)
+            nbad = int(bad.sum())
+            if nbad == 0:
+                return ins, 0, 0
+            if policy == "strict":
+                off = idxs[bad]
+                raise MalformedAccessError(
+                    name, f"{nbad} index(es) outside [0, {rows})",
+                    f"e.g. {int(off[0])}")
+            # drop == clamp here: a gather segment cannot be empty
+            return {**ins, "idxs": np.clip(idxs, 0, rows - 1)}, nbad, 0
+        # CSR stream (sls | spmm | fusedmm): ptrs (or lens) + idxs + vals
+        ptrs, from_lens = self._harden_ptrs(m, ins, name)
+        nnz = int(ptrs[-1])
+        if nnz != len(idxs):
+            raise MalformedAccessError(
+                name, "ptrs[-1] != len(idxs)", f"{nnz} != {len(idxs)}")
+        vals = ins.get("vals")
+        if vals is not None and len(np.asarray(vals)) != nnz:
+            raise MalformedAccessError(
+                name, "vals length != nnz",
+                f"{len(np.asarray(vals))} != {nnz}")
+        if self.lattice.lookup_capacity(nnz) > _INT32_MAX:
+            raise MalformedAccessError(
+                name, "padded lookup capacity exceeds int32 address space",
+                f"nnz={nnz}")
+        bad = (idxs < 0) | (idxs >= rows)
+        nbad = int(bad.sum())
+        if nbad == 0:
+            return ins, 0, 0
+        if policy == "strict":
+            off = idxs[bad]
+            raise MalformedAccessError(
+                name, f"{nbad} index(es) outside [0, {rows})",
+                f"e.g. {int(off[0])}")
+        if policy == "clamp":
+            return {**ins, "idxs": np.clip(idxs, 0, rows - 1)}, nbad, 0
+        # drop: excise the bad entries and rebuild the CSR offsets
+        keep = ~bad
+        seg = np.repeat(np.arange(m.num_segments), np.diff(ptrs))
+        kept_per_seg = np.bincount(seg[keep], minlength=m.num_segments)
+        new_ptrs = np.zeros(m.num_segments + 1, ptrs.dtype)
+        np.cumsum(kept_per_seg, out=new_ptrs[1:])
+        new = {**ins, "ptrs": new_ptrs, "idxs": idxs[keep]}
+        new.pop("lens", None)         # superseded by the rebuilt ptrs
+        if vals is not None:
+            new["vals"] = np.asarray(vals)[keep]
+        return new, 0, nbad
+
+    def _harden_ptrs(self, m: MemberPlan, ins: dict, name) -> tuple:
+        """Validate the CSR offset run (or derive it from ``lens``):
+        zero-based, monotone non-decreasing, one entry past the segments."""
+        if "ptrs" not in ins:
+            if "lens" not in ins:
+                raise MalformedAccessError(name, "missing ptrs/lens stream")
+            lens = np.asarray(ins["lens"])
+            if len(lens) != m.num_segments:
+                raise MalformedAccessError(
+                    name, "lens length != num_segments",
+                    f"{len(lens)} != {m.num_segments}")
+            if len(lens) and int(lens.min()) < 0:
+                raise MalformedAccessError(
+                    name, "negative segment length",
+                    f"min={int(lens.min())}")
+            ptrs = np.zeros(m.num_segments + 1, np.int64)
+            np.cumsum(lens, out=ptrs[1:])
+            return ptrs, True
+        ptrs = np.asarray(ins["ptrs"], np.int64)
+        if ptrs.shape != (m.num_segments + 1,):
+            raise MalformedAccessError(
+                name, "ptrs length != num_segments + 1",
+                f"{ptrs.shape} != ({m.num_segments + 1},)")
+        if int(ptrs[0]) != 0:
+            raise MalformedAccessError(
+                name, "ptrs must be zero-based", f"ptrs[0]={int(ptrs[0])}")
+        if len(ptrs) > 1 and int(np.diff(ptrs).min()) < 0:
+            raise MalformedAccessError(name, "ptrs must be non-decreasing")
+        return ptrs, False
 
     # ------------------------------------------------------------------
     # Per-step stream interpretation (single-device path)

@@ -86,8 +86,11 @@ class StepHandle:
     outputs: dict                 # op name -> device array (async)
     index: int                    # step number within the executor
     done: bool = False
+    faults: object = None         # chaos injector (site "result"), if any
 
     def result(self) -> dict:
+        if self.faults is not None:
+            self.faults.fire("result", step=self.index)
         jax.block_until_ready(self.outputs)
         self.done = True
         return self.outputs
@@ -230,6 +233,14 @@ class BufferPool:
         entry["owners"][turn] = None
         return entry, turn, created
 
+    def release_all(self) -> None:
+        """Forget every slot's owning handle (fault recovery: the owners
+        were marked done and abandoned, so their transfers will never be
+        consumed — the slots must become reusable, not leak busy)."""
+        for entry in self._entries.values():
+            entry["owners"] = [None] * len(entry["slots"])
+        self.stats["releases"] = self.stats.get("releases", 0) + 1
+
 
 @dataclasses.dataclass
 class _UnitState:
@@ -302,9 +313,12 @@ class ProgramExecutor:
                  shard_axis: str = "model", hot_rows=None,
                  exchange: Optional[str] = None,
                  replicate_outputs: Optional[bool] = None,
-                 pool: Optional[BufferPool] = None):
+                 pool: Optional[BufferPool] = None,
+                 index_policy: str = "strict",
+                 faults=None):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
+        assert index_policy in ap.INDEX_POLICIES, index_policy
         self.compiled = compiled
         self.interpret = (kops.default_interpret() if interpret is None
                           else interpret)
@@ -346,12 +360,24 @@ class ProgramExecutor:
         self._txn: Optional[TransferBatch] = None   # wave-coalesced puts
         self._inflight: deque = deque()
         self._steps = 0
+        # input hardening of the per-step offset streams (every marshaling
+        # path interprets the hardened dict): "strict" raises a typed
+        # MalformedAccessError, "clamp"/"drop" degrade per-lookup and count
+        self.index_policy = index_policy
+        # chaos injector (runtime.faults.FaultInjector-shaped, duck-typed
+        # so core never imports runtime); None in production
+        self.faults = faults
         self.stats = {"steps": 0, "table_stacks": 0, "table_restacks": 0,
                       "table_rebinds": 0, "marshal_hits": 0,
                       "marshal_misses": 0, "max_inflight": 0,
                       "exchange_index_bytes": 0, "exchange_row_bytes": 0,
                       "hot_lookups": 0, "cold_lookups": 0,
-                      "host_syncs": 0}
+                      "host_syncs": 0, "oob_lookups": 0,
+                      "dropped_lookups": 0, "resets": 0}
+
+    def _fire(self, site: str) -> None:
+        if self.faults is not None:
+            self.faults.fire(site, program=self.compiled.program.name)
 
     def _plan_for(self, u: _UnitState) -> ap.AccessPlan:
         """The unit's AccessPlan: the compiled artifact when it matches this
@@ -483,6 +509,7 @@ class ProgramExecutor:
         packing step N+k never races an in-flight transfer, regardless of
         how ``submit`` and ``step`` calls interleave across the programs
         sharing the pool."""
+        self._fire("marshal")
         key = self.pool.key_for((self._pool_tag, unit_idx), bucket, spec)
         entry, turn, created = self.pool.acquire(key, spec)
         self.stats["marshal_misses" if created else "marshal_hits"] += 1
@@ -525,6 +552,7 @@ class ProgramExecutor:
     def _put(self, arr) -> jax.Array:
         """Host→device transfer of one per-step operand, counted in
         ``host_syncs`` (the executor's per-step transfer-issue stat)."""
+        self._fire("transfer")
         self.stats["host_syncs"] += 1
         return jax.device_put(arr)
 
@@ -548,6 +576,7 @@ class ProgramExecutor:
         counted as a host sync (a host→device transfer the device pipeline
         must wait on — the collective exchange's whole point is issuing
         fewer of these per step)."""
+        self._fire("transfer")
         self.stats["host_syncs"] += 1
         return sp.put_sharded(arr, self.mesh, self.shard_axis)
 
@@ -794,24 +823,38 @@ class ProgramExecutor:
         u.txn_run = run
         return run
 
+    def _harden_unit(self, u: _UnitState, inputs: dict) -> dict:
+        """Validate the unit's offset streams against its AccessPlan under
+        this executor's ``index_policy`` before ANY marshaling path reads
+        them.  Returns the (possibly repaired) inputs dict — the same
+        object on clean streams, so the hardened steady state is
+        bit-identical to an unhardened executor."""
+        fallback = u.unit.names[0] if u.group is None else None
+        hardened, oob, dropped = u.plan.harden_step(
+            inputs, self.index_policy, fallback_name=fallback)
+        self.stats["oob_lookups"] += oob
+        self.stats["dropped_lookups"] += dropped
+        return hardened
+
     def _dispatch(self, inputs: dict) -> dict:
         outs: dict = {}
         for idx, u in enumerate(self._units):
+            uin = self._harden_unit(u, inputs)
             if u.table is None:
-                self._bind_unit(u, inputs)
+                self._bind_unit(u, uin)
                 self.stats["table_stacks"] += 1
-            elif not u.sources_unchanged(self._src_tables(u, inputs)):
+            elif not u.sources_unchanged(self._src_tables(u, uin)):
                 # the caller handed different table objects (fresh arrays,
                 # another model's params, per-step fusedmm features):
                 # rebind rather than silently serve stale tables.  Identity
                 # is the steady-state fast path — stable params never pay.
-                self._bind_unit(u, inputs)
+                self._bind_unit(u, uin)
                 self.stats["table_rebinds"] += 1
             if u.group is None:
                 if self.backend == "jax":
                     name = u.unit.names[0]
                     key = "x" if u.res.op.kind == "fusedmm" else "table"
-                    ins = {**inputs[name], key: u.table}
+                    ins = {**uin[name], key: u.table}
                     if self._txn is not None and \
                             u.res.op.kind in ("gather", "kg"):
                         # CSR-kind jax units derive segment ids on the host
@@ -823,21 +866,21 @@ class ProgramExecutor:
                         continue
                     outs[name] = bj.execute(u.res.op, ins)
                     continue
-                dev, ml = self._marshal_single(idx, u, inputs)
+                dev, ml = self._marshal_single(idx, u, uin)
                 outs[u.unit.names[0]] = self._execute(u, dev, ml)
                 continue
             if self.shards > 1:
-                fused = (self._run_gather_sharded(idx, u, inputs)
+                fused = (self._run_gather_sharded(idx, u, uin)
                          if u.group.op.kind == "gather"
-                         else self._run_csr_sharded(idx, u, inputs))
+                         else self._run_csr_sharded(idx, u, uin))
             elif u.group.op.kind == "gather":
-                dev, ml = self._marshal_gather(idx, u, inputs)
+                dev, ml = self._marshal_gather(idx, u, uin)
                 if self._txn is not None and self.backend == "jax":
                     self._txn_defer(outs, dev, self._unit_run(u))
                     continue
                 fused = self._execute(u, dev, ml)
             else:
-                dev, ml = self._marshal_csr(idx, u, inputs)
+                dev, ml = self._marshal_csr(idx, u, uin)
                 fused = self._execute(u, dev, ml)
             for name, mop, off in zip(u.group.members, u.group.member_ops,
                                       u.group.seg_offsets):
@@ -855,6 +898,7 @@ class ProgramExecutor:
         stage their streams on the shared :class:`TransferBatch` and their
         dispatch is deferred to its flush; the handle's outputs materialize
         then.  Sharded executors route their own exchange and ignore it."""
+        self._fire("dispatch")
         while len(self._inflight) >= self.depth:
             self._inflight.popleft().result()
         self._slots_packed = []
@@ -863,7 +907,7 @@ class ProgramExecutor:
             outs = self._dispatch(inputs)
         finally:
             self._txn = None
-        h = StepHandle(outs, self._steps)
+        h = StepHandle(outs, self._steps, faults=self.faults)
         for entry, turn in self._slots_packed:
             entry["owners"][turn] = h     # slot busy until h resolves
         self._steps += 1
@@ -890,6 +934,22 @@ class ProgramExecutor:
     def drain(self) -> None:
         while self._inflight:
             self._inflight.popleft().result()
+
+    def reset(self) -> None:
+        """Fault recovery: abandon every in-flight step and free its
+        staging slots.  The abandoned handles are marked ``done`` (their
+        outputs may be garbage — a faulted marshal can leave a partially
+        packed buffer — and must not be consumed), the pool's owner
+        accounting is cleared so slots don't leak busy, and the next
+        :meth:`submit` starts from a clean pipeline.  Device-resident
+        tables and jitted kernels survive — recovery costs no recompile."""
+        for h in self._inflight:
+            h.done = True
+        self._inflight.clear()
+        self._slots_packed = []
+        self._txn = None
+        self.pool.release_all()
+        self.stats["resets"] += 1
 
     def use_pool(self, pool: BufferPool) -> None:
         """Re-home host staging onto ``pool`` (the pipeline-group join).
@@ -982,6 +1042,10 @@ class PipelineGroup:
         self.depth = depth or sum(ex.depth for ex in self.executors)
         self._inflight: deque = deque()   # (name, StepHandle)
         self._wave_fns: dict = {}         # wave signature -> jitted fn
+        # group-level chaos injector (sites: dispatch at submit_wave,
+        # transfer at the wave flush, result on the wave's handles); set by
+        # the server so cached member executors stay untouched
+        self.faults = None
         self.stats = {
             "submitted": {n: 0 for n in self.names},
             "in_flight": {n: 0 for n in self.names},
@@ -989,7 +1053,12 @@ class PipelineGroup:
             "group_drains": 0,
             "waves": 0,
             "batched_arrays": 0,
+            "resets": 0,
         }
+
+    def _fire(self, site: str) -> None:
+        if self.faults is not None:
+            self.faults.fire(site, group=tuple(self.names))
 
     def executor(self, name: str) -> ProgramExecutor:
         return self._by_name[name]
@@ -1035,6 +1104,7 @@ class PipelineGroup:
         dispatches are traced into a single jitted wave executable (cached
         on the wave's unit/shape signature, so steady-state waves never
         retrace).  Returns ``{name: StepHandle}``."""
+        self._fire("dispatch")
         self._gc()
         while len(self._inflight) > max(0, self.depth - len(wave)):
             n0, h0 = self._inflight.popleft()
@@ -1046,6 +1116,9 @@ class PipelineGroup:
         for name, inputs in wave.items():
             handles[name] = self._by_name[name].submit(inputs, txn=txn)
         self._flush_wave(txn)
+        if self.faults is not None:
+            for h in handles.values():
+                h.faults = self.faults
         st = self.stats
         st["waves"] += 1
         st["batched_arrays"] += txn.n_arrays
@@ -1064,6 +1137,7 @@ class PipelineGroup:
         per-wave streams are both arguments, so a table rebind is just a
         different argument and the cache key only carries unit identities
         and array shapes."""
+        self._fire("transfer")
         if not txn.fills:
             txn.flush()                   # nothing deferred: transfers only
             return
@@ -1105,6 +1179,21 @@ class PipelineGroup:
             h.result()
         self._gc()
 
+    def reset(self) -> None:
+        """Fault recovery across the whole group: abandon every member's
+        in-flight steps (a faulted wave may have left partially staged
+        transfers), clear the group ledger, and release the shared pool's
+        slot owners.  The next :meth:`submit_wave` starts clean — jitted
+        wave executables and bound tables survive."""
+        for n, h in self._inflight:
+            h.done = True
+        self._inflight.clear()
+        for n in self.names:
+            self.stats["in_flight"][n] = 0
+        for ex in self.executors:
+            ex.reset()
+        self.stats["resets"] += 1
+
     def group_stats(self) -> dict:
         """Per-program in-flight accounting + the shared pool's counters
         (what benchmarks/run.py surfaces)."""
@@ -1118,6 +1207,7 @@ class PipelineGroup:
             "group_drains": self.stats["group_drains"],
             "waves": self.stats["waves"],
             "batched_arrays": self.stats["batched_arrays"],
+            "resets": self.stats["resets"],
             "pool": dict(self.pool.stats),
         }
 
@@ -1147,8 +1237,8 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  depth: int = 2, backend: str = "pallas",
                  mesh=None, shard_axis: str = "model",
                  hot_rows=None, exchange: Optional[str] = None,
-                 replicate_outputs: Optional[bool] = None
-                 ) -> ProgramExecutor:
+                 replicate_outputs: Optional[bool] = None,
+                 index_policy: str = "strict") -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -1197,7 +1287,7 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     hot_spec = ap.canonical_hot(hot_rows)
     key = (program.signature(), opt_level, vlen, interpret, budget, depth,
            backend, mesh, shard_axis if mesh is not None else None,
-           hot_spec, exchange, bool(replicate_outputs))
+           hot_spec, exchange, bool(replicate_outputs), index_policy)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
@@ -1206,7 +1296,8 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     ex = ProgramExecutor(compiled, interpret=interpret, depth=depth,
                          backend=backend, mesh=mesh, shard_axis=shard_axis,
                          hot_rows=hot_rows, exchange=exchange,
-                         replicate_outputs=replicate_outputs)
+                         replicate_outputs=replicate_outputs,
+                         index_policy=index_policy)
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 

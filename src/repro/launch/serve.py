@@ -1,16 +1,24 @@
 """Production serving launcher (batched decode; see runtime/server.py).
 
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b --reduced
+
+Fault-tolerance knobs (PR 7): ``--index-policy`` hardens prompt/offset
+streams, ``--ttft-slo``/``--capacity-rps`` turn on SLO-aware shedding,
+``--wave-deadline`` arms the wave watchdog, and ``--chaos-site``/
+``--chaos-at`` inject a seeded fault schedule (see runtime/faults.py) to
+exercise the recovery path from the command line.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 
 import jax
 import numpy as np
 
 from ..configs import get_config, get_reduced
 from ..models import LM
+from ..runtime.faults import FaultInjector, FaultSpec
 from ..runtime.server import DecodeServer, Request
 
 
@@ -25,24 +33,59 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="cross-program pipelining: feed each wave's "
                          "access streams through the PipelineGroup")
+    ap.add_argument("--index-policy", default="strict",
+                    choices=("strict", "clamp", "drop"),
+                    help="offset-stream hardening: strict fails the "
+                         "request typed, clamp/drop repair and count")
+    ap.add_argument("--ttft-slo", type=float, default=None, metavar="S",
+                    help="server-wide TTFT budget (seconds); lapsed "
+                         "requests expire, hopeless ones shed")
+    ap.add_argument("--capacity-rps", type=float, default=None,
+                    help="calibrated service capacity (requests/s) for "
+                         "submit-time predicted-wait shedding")
+    ap.add_argument("--wave-deadline", type=float, default=None,
+                    metavar="S", help="wave watchdog deadline (seconds)")
+    ap.add_argument("--wave-retries", type=int, default=1)
+    ap.add_argument("--chaos-site", default=None,
+                    choices=("marshal", "transfer", "dispatch", "result",
+                             "wave"),
+                    help="inject an InjectedFailure at this site")
+    ap.add_argument("--chaos-at", type=int, nargs="*", default=[1],
+                    help="1-based call ordinals of the site to fire at")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
+    faults = None
+    if args.chaos_site is not None:
+        faults = FaultInjector(
+            [FaultSpec(args.chaos_site, at=tuple(args.chaos_at))],
+            seed=args.chaos_seed)
     srv = DecodeServer(lm, params, batch_slots=args.slots,
                        max_len=args.max_len,
                        prefill_chunk=args.prefill_chunk,
-                       pipeline=args.pipeline)
+                       pipeline=args.pipeline,
+                       index_policy=args.index_policy,
+                       capacity_rps=args.capacity_rps,
+                       ttft_slo_s=args.ttft_slo,
+                       wave_deadline_s=args.wave_deadline,
+                       wave_retries=args.wave_retries,
+                       faults=faults)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8).astype(
         np.int32), max_new_tokens=16) for _ in range(args.requests)]
     for r in reqs:
         srv.submit(r)
     steps = srv.run_until_drained()
+    statuses = collections.Counter(r.status for r in reqs)
     print(f"served {len(reqs)} requests in {steps} serving iterations; "
-          f"all done={all(r.done for r in reqs)}")
+          f"all done={all(r.done for r in reqs)}; "
+          f"statuses={dict(statuses)}")
     print("serve_stats:", srv.serve_stats)
+    if faults is not None:
+        print("chaos:", faults.stats())
     if srv.pipeline_group is not None:
         print("pipeline_group:",
               srv.compile_stats.get("pipeline_group", {}))

@@ -32,6 +32,31 @@ The serving loop the Ember steady-state machine is graded under
 Per-request service metrics (submit/admit/first-token/done wall-clock
 stamps and per-token times) are recorded on the :class:`Request` itself —
 what the open-loop bench aggregates into TTFT / per-token percentiles.
+
+**Fault tolerance** (PR 7): the loop degrades per-request, never
+per-process.
+
+* **Input hardening** — prompts validate against the model vocab under
+  ``index_policy`` ("strict" fails the request with a typed error,
+  "clamp"/"drop" repair it and count), and the same policy flows into the
+  pipeline group's executors, whose AccessPlans harden every offset
+  stream they marshal.
+* **SLO-aware admission** — a request carries a TTFT budget
+  (``Request.deadline_s``, or the server-wide ``ttft_slo_s``): submit-time
+  shedding predicts queue wait from the calibrated ``capacity_rps`` the
+  serving bench measures, admission-time shedding predicts prefill time
+  from the measured wave EWMA, and a request whose budget lapsed is
+  retired with status ``expired`` — under overload the queue sheds
+  instead of growing unboundedly.
+* **Wave watchdog + bounded retry** — ``wave_deadline_s`` bounds the
+  whole wave (LM step + pipeline feed + handle results); a hung or
+  faulted wave resets the pipeline group (abandoning its in-flight
+  steps and staging slots) and retries up to ``wave_retries`` times
+  before failing ONLY the implicated requests; every other slot and all
+  later waves proceed bit-identically to a fault-free run.
+
+Each request ends in exactly one terminal ``status``: ``ok`` | ``shed`` |
+``expired`` | ``failed``.
 """
 from __future__ import annotations
 
@@ -45,14 +70,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.access_plan import INDEX_POLICIES
+from .faults import EmberFault, WaveTimeout
+
+#: terminal request statuses (Request.status ends as exactly one of these)
+STATUSES = ("ok", "shed", "expired", "failed")
+
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray              # (L,) int32
     max_new_tokens: int = 16
     priority: int = 0               # lower serves first; FIFO within a class
+    deadline_s: Optional[float] = None   # TTFT budget from submit (None: server SLO)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "queued"          # queued|active -> ok|shed|expired|failed
+    error: Optional[str] = None     # typed failure detail (status != ok)
     # service metrics, stamped by the server (perf_counter seconds)
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None
@@ -69,13 +103,35 @@ _EMPTY = np.zeros(0, np.int32)
 class DecodeServer:
     def __init__(self, lm, params, *, batch_slots: int = 4,
                  max_len: int = 256, eos_id: Optional[int] = None,
-                 prefill_chunk: int = 8, pipeline: bool = False):
+                 prefill_chunk: int = 8, pipeline: bool = False,
+                 index_policy: str = "strict",
+                 capacity_rps: Optional[float] = None,
+                 ttft_slo_s: Optional[float] = None,
+                 wave_deadline_s: Optional[float] = None,
+                 wave_retries: int = 1,
+                 faults=None):
+        assert index_policy in INDEX_POLICIES, index_policy
         self.lm = lm
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.eos = eos_id
         self.prefill_chunk = max(1, int(prefill_chunk))
+        # --- fault-tolerance knobs -------------------------------------
+        self.index_policy = index_policy
+        # calibrated service capacity (requests/s at saturation — what
+        # bench_serving.py's closed-loop calibration measures); drives the
+        # submit-time predicted-wait shed.  None disables that check.
+        self.capacity_rps = capacity_rps
+        # server-wide TTFT budget applied to requests without their own
+        self.ttft_slo_s = ttft_slo_s
+        self.wave_deadline_s = wave_deadline_s
+        self.wave_retries = max(0, int(wave_retries))
+        self.faults = faults            # chaos injector (site "wave" here)
+        self._ewma_wave_s: Optional[float] = None   # measured wave time
+        # prompt-validation bound: stub LMs expose `vocab`, real ones cfg
+        self._vocab = getattr(lm, "vocab", None) or getattr(
+            getattr(lm, "cfg", None), "vocab_size", None)
         self.queue: list = []           # (priority, submit seq, Request)
         self._seq = itertools.count()
         self.active: List[Optional[Request]] = [None] * batch_slots
@@ -89,7 +145,10 @@ class DecodeServer:
         self.waves = 0
         self.serve_stats = {"waves": 0, "prefill_waves": 0,
                             "decode_waves": 0, "admitted": 0, "finished": 0,
-                            "slot_resets": 0, "queue_peak": 0}
+                            "slot_resets": 0, "queue_peak": 0,
+                            "shed": 0, "expired": 0, "failed": 0,
+                            "oob_prompt_tokens": 0, "wave_faults": 0,
+                            "wave_retries": 0, "watchdog_timeouts": 0}
         # Ember steady-state path: the decode step's irregular lookups
         # compile ONCE per (slots, 1) signature and the ProgramExecutor's
         # marshaling cache (device-resident stacked tables + roff streams)
@@ -109,7 +168,14 @@ class DecodeServer:
         self.pipeline_group = None
         self._undispatch_name = None
         if pipeline and hasattr(lm, "embedding_pipeline"):
-            self.pipeline_group = lm.embedding_pipeline(batch_slots, 1)
+            # the server's index policy flows into every member executor
+            # (cache-keyed), so the pipeline's marshaling paths harden the
+            # mirrored streams under the same policy as the prompts
+            self.pipeline_group = lm.embedding_pipeline(
+                batch_slots, 1, index_policy=index_policy)
+            if faults is not None:
+                # group-level attach: cached member executors stay clean
+                self.pipeline_group.faults = faults
             names = self.pipeline_group.names
             self._embed_name = names[0]
             if len(names) > 1:
@@ -154,34 +220,131 @@ class DecodeServer:
 
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
+        if not self._harden_prompt(req):
+            return                       # terminal: failed (typed error)
+        if self._shed_at_submit(req):
+            return                       # terminal: shed (predicted wait)
         heapq.heappush(self.queue, (req.priority, next(self._seq), req))
         self.serve_stats["queue_peak"] = max(self.serve_stats["queue_peak"],
                                              len(self.queue))
 
+    def _terminate(self, req: Request, status: str,
+                   error: Optional[str] = None):
+        """Retire a request that never reached a slot (or leaves one):
+        stamp its terminal status — the loop itself never dies for it."""
+        req.status = status
+        req.error = error
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.serve_stats[status if status != "ok" else "finished"] += 1
+
+    def _harden_prompt(self, req: Request) -> bool:
+        """Validate the prompt against the model vocab under
+        ``index_policy``.  strict → the REQUEST fails (typed, terminal),
+        clamp/drop → repair and count.  Returns False when terminal."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        req.prompt = prompt
+        if self._vocab is None:
+            return True
+        bad = (prompt < 0) | (prompt >= self._vocab)
+        nbad = int(bad.sum())
+        if nbad == 0:
+            return True
+        if self.index_policy == "strict":
+            self._terminate(
+                req, "failed",
+                error=f"MalformedAccessError: {nbad} prompt token(s) "
+                      f"outside [0, {self._vocab})")
+            return False
+        self.serve_stats["oob_prompt_tokens"] += nbad
+        if self.index_policy == "clamp":
+            req.prompt = np.clip(prompt, 0, self._vocab - 1)
+            return True
+        req.prompt = prompt[~bad]        # drop
+        if req.prompt.size == 0:
+            self._terminate(req, "failed",
+                            error="MalformedAccessError: prompt empty "
+                                  "after dropping out-of-bounds tokens")
+            return False
+        return True
+
+    def _deadline(self, req: Request) -> Optional[float]:
+        return req.deadline_s if req.deadline_s is not None \
+            else self.ttft_slo_s
+
+    def _shed_at_submit(self, req: Request) -> bool:
+        """Predicted-wait shed: with a calibrated service capacity, a
+        request that would wait out its whole TTFT budget in the queue is
+        shed NOW — the overload answer that keeps the queue bounded."""
+        d = self._deadline(req)
+        if d is None or not self.capacity_rps:
+            return False
+        predicted_wait = len(self.queue) / self.capacity_rps
+        if predicted_wait > d:
+            self._terminate(req, "shed",
+                            error=f"predicted queue wait "
+                                  f"{predicted_wait:.3f}s > budget {d:.3f}s")
+            return True
+        return False
+
+    def _predict_ttft_s(self, req: Request) -> float:
+        """Service-time part of the TTFT prediction at admission: prefill
+        waves needed × the measured wave EWMA (0 until a wave has run —
+        the cold server admits optimistically)."""
+        if self._ewma_wave_s is None:
+            return 0.0
+        prefill_waves = max(
+            1, -(-int(np.size(req.prompt)) // self.prefill_chunk))
+        return prefill_waves * self._ewma_wave_s
+
     def _admit(self):
         """Fill every free slot from the priority heap — called at the top
         of each serving iteration AND right after mid-wave retirement, so a
-        freed slot is refilled in the same iteration."""
+        freed slot is refilled in the same iteration.  A popped request
+        whose TTFT budget already lapsed (``expired``) or provably cannot
+        make it (``shed``) is retired here, terminal, and the next queued
+        request considered for the slot."""
         for i in range(self.slots):
-            if self.active[i] is not None or not self.queue:
+            if self.active[i] is not None:
                 continue
-            _, _, req = heapq.heappop(self.queue)
-            now = time.perf_counter()
-            req.t_admit = now
-            req.admitted_wave = self.waves
-            self.active[i] = req
-            # leave >=1 position of room for generated tokens
-            self._prompt_left[i] = np.asarray(
-                req.prompt, np.int32).reshape(-1)[:self.max_len - 1]
-            self._pos[i] = 0
-            self.serve_stats["admitted"] += 1
+            while self.queue:
+                _, _, req = heapq.heappop(self.queue)
+                now = time.perf_counter()
+                d = self._deadline(req)
+                if d is not None:
+                    waited = now - req.t_submit
+                    if waited >= d:
+                        self._terminate(req, "expired",
+                                        error=f"TTFT budget {d:.3f}s "
+                                              f"lapsed in queue")
+                        continue
+                    if waited + self._predict_ttft_s(req) > d:
+                        self._terminate(
+                            req, "shed",
+                            error=f"predicted TTFT exceeds budget "
+                                  f"{d:.3f}s at admission")
+                        continue
+                req.t_admit = now
+                req.status = "active"
+                req.admitted_wave = self.waves
+                self.active[i] = req
+                # leave >=1 position of room for generated tokens
+                self._prompt_left[i] = np.asarray(
+                    req.prompt, np.int32).reshape(-1)[:self.max_len - 1]
+                self._pos[i] = 0
+                self.serve_stats["admitted"] += 1
+                break
 
-    def _finish(self, i: int, req: Request, retired: np.ndarray):
+    def _finish(self, i: int, req: Request, retired: np.ndarray,
+                status: str = "ok", error: Optional[str] = None):
+        req.status = status
+        if error is not None:
+            req.error = error
         req.done = True
         req.t_done = time.perf_counter()
         req.finished_wave = self.waves
         retired[i] = True
-        self.serve_stats["finished"] += 1
+        self.serve_stats[status if status != "ok" else "finished"] += 1
 
     def _recycle(self, retired: np.ndarray):
         """Mid-wave slot recycling: zero the retired slots' cache state and
@@ -217,7 +380,13 @@ class DecodeServer:
             wave[self._undispatch_name] = \
                 {"moe_undispatch": {"table": self._cap_buf,
                                     "idxs": idxs.astype(np.int32)}}
-        grp.submit_wave(wave)
+        handles = grp.submit_wave(wave)
+        if self.wave_deadline_s is not None:
+            # the watchdog needs a bounded observation point: consume this
+            # wave's handles now (trades the cross-wave overlap for an
+            # enforceable deadline — only paid when a deadline is set)
+            for h in handles.values():
+                h.result()
 
     def step(self) -> int:
         """One serving iteration: admit → one wave (chunked prefill and/or
@@ -256,16 +425,69 @@ class DecodeServer:
         if lens.sum() == 0:
             self._recycle(retired)
             return sum(r is not None for r in self.active)
-        logits, self.caches = self._wave(self.params, jnp.asarray(tokens),
-                                         jnp.asarray(lens), self.caches)
-        if self.pipeline_group is not None:
-            self._feed_pipeline(tokens)
+        # --- the guarded wave body: LM step + pipeline feed, under the
+        # watchdog deadline, retried after a typed fault ------------------
+        tokens_j, lens_j = jnp.asarray(tokens), jnp.asarray(lens)
+        t0 = time.perf_counter()
+        lm_done = False     # the LM wave donates its caches: NEVER re-run
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.fire("wave", wave=self.waves)
+                if not lm_done:
+                    logits, self.caches = self._wave(
+                        self.params, tokens_j, lens_j, self.caches)
+                    lm_done = True
+                if self.pipeline_group is not None:
+                    self._feed_pipeline(tokens)
+                if self.wave_deadline_s is not None:
+                    el = time.perf_counter() - t0
+                    if el > self.wave_deadline_s:
+                        raise WaveTimeout(
+                            f"wave {self.waves} took {el * 1e3:.1f}ms > "
+                            f"deadline {self.wave_deadline_s * 1e3:.1f}ms")
+                break
+            except EmberFault as e:
+                # typed faults only: anything else is a bug and propagates
+                self.serve_stats["wave_faults"] += 1
+                if isinstance(e, WaveTimeout):
+                    self.serve_stats["watchdog_timeouts"] += 1
+                if self.pipeline_group is not None:
+                    self.pipeline_group.reset()
+                if attempt >= self.wave_retries:
+                    # fail ONLY the implicated requests (the slots served
+                    # by this wave); their slots recycle, the loop lives
+                    err = f"{type(e).__name__}: {e}"
+                    for i, req in enumerate(self.active):
+                        if req is None or retired[i]:
+                            continue
+                        self._finish(i, req, retired, status="failed",
+                                     error=err)
+                    self._recycle(retired)
+                    return sum(r is not None for r in self.active)
+                attempt += 1
+                self.serve_stats["wave_retries"] += 1
+                t0 = time.perf_counter()   # the retry gets a fresh budget
+        dt = time.perf_counter() - t0
+        self._ewma_wave_s = dt if self._ewma_wave_s is None else \
+            0.7 * self._ewma_wave_s + 0.3 * dt
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         self._pos += lens
         self.waves += 1
         self.serve_stats["waves"] += 1
         self.serve_stats["prefill_waves" if c > 1 else "decode_waves"] += 1
         now = time.perf_counter()
+        # mid-wave expiry: a slot still waiting on its first token whose
+        # TTFT budget lapsed during service retires here (terminal), so an
+        # overloaded wave never holds dead slots
+        for i, req in enumerate(self.active):
+            if req is None or retired[i] or req.t_first is not None:
+                continue
+            d = self._deadline(req)
+            if d is not None and now - req.t_submit > d:
+                self._finish(i, req, retired, status="expired",
+                             error=f"TTFT budget {d:.3f}s lapsed in service")
         for i, req in enumerate(self.active):
             if req is None or retired[i] or not emits[i]:
                 continue

@@ -34,14 +34,11 @@ from ..checkpoint import CheckpointManager
 from ..data.pipeline import SyntheticTokens
 from ..optim import adamw, apply_updates
 from ..optim.compress import compress_gradients, error_feedback_init
-
-
-class StragglerTimeout(RuntimeError):
-    pass
-
-
-class InjectedFailure(RuntimeError):
-    pass
+# the typed fault vocabulary moved to the shared runtime.faults module
+# (trainer and server classify the same errors); re-exported here for
+# backward compatibility with existing `from repro.runtime.trainer
+# import InjectedFailure` callers
+from .faults import InjectedFailure, StragglerTimeout  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -58,10 +55,14 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, lm, data: SyntheticTokens, tcfg: TrainerConfig,
-                 in_shardings=None):
+                 in_shardings=None, faults=None):
         self.lm = lm
         self.data = data
         self.tcfg = tcfg
+        # optional shared chaos injector (runtime.faults.FaultInjector):
+        # fires the "step" site each iteration — the seeded superset of the
+        # legacy boolean failure_schedule
+        self.faults = faults
         self.opt = adamw(lr=tcfg.lr)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self._step_fn = None
@@ -132,6 +133,8 @@ class Trainer:
         for step in range(step0, tcfg.total_steps):
             if failure_schedule is not None and failure_schedule(step):
                 raise InjectedFailure(f"injected failure at step {step}")
+            if self.faults is not None:
+                self.faults.fire("step", step=step)
             t0 = time.time()
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.data.batch_at(step).items()}

@@ -17,7 +17,6 @@ calling process's environment.
 from __future__ import annotations
 
 import os
-import subprocess
 import sys
 import textwrap
 from pathlib import Path
@@ -30,7 +29,8 @@ REPO = Path(__file__).resolve().parent.parent
 # from tests without installing the repo
 sys.path.insert(0, str(REPO))
 
-from benchmarks._mesh import MESH_SKIP, forced_device_env  # noqa: E402
+from benchmarks._mesh import (MESH_SKIP, forced_device_env,  # noqa: E402
+                              run_with_spawn_retry)
 
 
 def pytest_addoption(parser):
@@ -83,9 +83,12 @@ def run_on_mesh():
         env = forced_device_env(devices)
         env["PYTHONPATH"] = "src" + os.pathsep + str(REPO) + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-        r = subprocess.run([sys.executable, "-c", body],
-                           capture_output=True, text=True, env=env,
-                           cwd=str(REPO), timeout=timeout)
+        # bounded spawn retry: a loaded CI host transiently failing the
+        # fork/exec (or OOM-killing the child before it runs) should not
+        # flake the 2-device job; real test failures never retry
+        r = run_with_spawn_retry([sys.executable, "-c", body],
+                                 capture_output=True, text=True, env=env,
+                                 cwd=str(REPO), timeout=timeout)
         if MESH_SKIP in r.stdout:
             pytest.skip(f"forced {devices}-device CPU mesh not honored: "
                         f"{r.stdout.strip().splitlines()[-1]}")

@@ -238,6 +238,169 @@ except ImportError:      # pragma: no cover - exercised in the container
 # replicate_outputs, in a forced-2-device subprocess
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# Malformed-stream leg (PR 7): corrupted index streams through the hardened
+# executor vs independent repair oracles
+# ---------------------------------------------------------------------------
+
+def corrupt_step(rng, prog: EmbeddingProgram, step: dict):
+    """Copy ``step`` with ~1/3 of each op's indices pushed out of bounds
+    (negative and >= vocab).  Returns ``(bad_step, n_gather_kg, n_csr)`` —
+    the per-kind OOB counts the hardened executor must report."""
+    bad = {n: dict(ins) for n, ins in step.items()}
+    n_gk = n_csr = 0
+    for name, op in prog.ops:
+        idxs = np.asarray(bad[name]["idxs"])
+        if idxs.size == 0:
+            continue
+        k = max(1, idxs.size // 3)
+        pos = rng.choice(idxs.size, size=k, replace=False)
+        rows = op.num_embeddings
+        oob = np.where(rng.integers(0, 2, k) == 0,
+                       -1 - rng.integers(0, 3, k),
+                       rows + rng.integers(0, 5, k))
+        out = idxs.copy()
+        out[pos] = oob
+        bad[name]["idxs"] = out.astype(np.int32)
+        if op.kind in ("gather", "kg"):
+            n_gk += k
+        else:
+            n_csr += k
+    return bad, n_gk, n_csr
+
+
+def clamp_reference(prog: EmbeddingProgram, step: dict) -> dict:
+    """The clamp oracle input: every index clipped into its vocab."""
+    ref = {}
+    for name, op in prog.ops:
+        ins = dict(step[name])
+        ins["idxs"] = np.clip(np.asarray(ins["idxs"]), 0,
+                              op.num_embeddings - 1).astype(np.int32)
+        ref[name] = ins
+    return ref
+
+
+def drop_reference(prog: EmbeddingProgram, step: dict) -> dict:
+    """The drop oracle input: CSR ops excise their OOB entries (ptrs
+    rebuilt); gather/kg keep one lookup per segment, so drop degrades to
+    clamp there — the same contract the executor documents."""
+    ref = {}
+    for name, op in prog.ops:
+        ins = dict(step[name])
+        idxs = np.asarray(ins["idxs"])
+        rows = op.num_embeddings
+        oob = (idxs < 0) | (idxs >= rows)
+        if op.kind in ("gather", "kg"):
+            ins["idxs"] = np.clip(idxs, 0, rows - 1).astype(np.int32)
+        elif oob.any():
+            ptrs = np.asarray(ins["ptrs"], np.int64)
+            seg = np.repeat(np.arange(op.num_segments), np.diff(ptrs))
+            keep = ~oob
+            kept = np.bincount(seg[keep], minlength=op.num_segments)
+            new_ptrs = np.zeros(op.num_segments + 1, np.int64)
+            np.cumsum(kept, out=new_ptrs[1:])
+            ins["ptrs"] = new_ptrs
+            ins["idxs"] = idxs[keep].astype(np.int32)
+            if "vals" in ins:
+                ins["vals"] = np.asarray(ins["vals"])[keep]
+        ref[name] = ins
+    return ref
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_differential_malformed_streams(seed, fast_mode):
+    """strict raises typed, clamp/drop match their repair oracles with
+    exact per-policy counters, and a post-fault reset serves clean steps
+    bit-identically — on both backends."""
+    from repro.core.access_plan import MalformedAccessError
+    if fast_mode and seed >= 2:
+        pytest.skip("--fast smoke subset (full run sweeps all seeds)")
+    rng = np.random.default_rng(5_000 + seed)
+    prog = random_program(rng)
+    tables = random_tables(rng, prog)
+    n_gk = n_csr = 0
+    for _ in range(8):           # all-empty steps have nothing to corrupt
+        clean = random_step(rng, prog, tables)
+        bad, n_gk, n_csr = corrupt_step(rng, prog, clean)
+        if n_gk + n_csr:
+            break
+    assert n_gk + n_csr > 0
+    pres = compile_program(prog, "O3", vlen=VLEN, use_cache=False)
+    clean_oracle = run_program_interpreted(pres, clean)
+    clamp_oracle = run_program_interpreted(pres, clamp_reference(prog, bad))
+    drop_oracle = run_program_interpreted(pres, drop_reference(prog, bad))
+    for backend in ("jax", "pallas"):
+        tag = f"seed {seed} {backend}"
+        # strict: typed error, and the executor recovers after reset
+        ex = ProgramExecutor(pres, backend=backend)
+        with pytest.raises(MalformedAccessError, match="outside"):
+            ex.step(bad)
+        ex.reset()
+        got = ex.step(clean)
+        for n in clean_oracle:
+            np.testing.assert_allclose(
+                np.asarray(got[n]), np.asarray(clean_oracle[n]),
+                rtol=RTOL, atol=ATOL, err_msg=f"{tag} post-strict {n}")
+        # clamp: repaired output == oracle on clipped inputs, all counted
+        exc = ProgramExecutor(pres, backend=backend, index_policy="clamp")
+        got = exc.step(bad)
+        for n in clamp_oracle:
+            np.testing.assert_allclose(
+                np.asarray(got[n]), np.asarray(clamp_oracle[n]),
+                rtol=RTOL, atol=ATOL, err_msg=f"{tag} clamp {n}")
+        assert exc.stats["oob_lookups"] == n_gk + n_csr
+        assert exc.stats["dropped_lookups"] == 0
+        # drop: CSR entries excised (counted dropped), gather/kg clamped
+        exd = ProgramExecutor(pres, backend=backend, index_policy="drop")
+        got = exd.step(bad)
+        for n in drop_oracle:
+            np.testing.assert_allclose(
+                np.asarray(got[n]), np.asarray(drop_oracle[n]),
+                rtol=RTOL, atol=ATOL, err_msg=f"{tag} drop {n}")
+        assert exd.stats["oob_lookups"] == n_gk
+        assert exd.stats["dropped_lookups"] == n_csr
+
+
+def test_hardening_clean_inputs_bit_identical():
+    """The acceptance bar: hardened policies are zero-cost on clean
+    streams — outputs bit-identical (not merely close) across policies."""
+    rng = np.random.default_rng(77)
+    prog = random_program(rng)
+    tables = random_tables(rng, prog)
+    steps = [random_step(rng, prog, tables) for _ in range(2)]
+    pres = compile_program(prog, "O3", vlen=VLEN, use_cache=False)
+    outs = {}
+    for policy in ("strict", "clamp", "drop"):
+        ex = ProgramExecutor(pres, backend="jax", index_policy=policy)
+        outs[policy] = [ex.step(s) for s in steps]
+        assert ex.stats["oob_lookups"] == 0
+        assert ex.stats["dropped_lookups"] == 0
+    for k in range(len(steps)):
+        for n in outs["strict"][k]:
+            for policy in ("clamp", "drop"):
+                np.testing.assert_array_equal(
+                    np.asarray(outs["strict"][k][n]),
+                    np.asarray(outs[policy][k][n]),
+                    err_msg=f"step {k} op {n} policy {policy}")
+
+
+def test_structural_damage_raises_under_every_policy():
+    """Non-monotone ptrs are structural (unrepairable) — typed error even
+    under clamp/drop."""
+    from repro.core.access_plan import MalformedAccessError
+    prog = EmbeddingProgram("bad", (
+        ("s", EmbeddingOp("sls", 3, 8, 8, avg_lookups=2)),))
+    pres = compile_program(prog, "O3", vlen=VLEN, use_cache=False)
+    table = np.zeros((8, 8), np.float32)
+    ins = {"s": {"table": table,
+                 "ptrs": np.array([0, 3, 1, 4], np.int64),
+                 "idxs": np.zeros(4, np.int32)}}
+    for policy in ("strict", "clamp", "drop"):
+        ex = ProgramExecutor(pres, backend="jax", index_policy=policy)
+        with pytest.raises(MalformedAccessError, match="non-decreasing"):
+            ex.step(ins)
+
+
 def test_differential_two_device_mesh(run_on_mesh, fast_mode):
     seeds = 2 if fast_mode else 6
     code = f"""

@@ -148,6 +148,87 @@ def test_request_service_metrics_are_stamped():
 
 
 # ---------------------------------------------------------------------------
+# SLO edge cases (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_zero_admissible_requests_with_nonempty_queue():
+    """Every queued request's budget already lapsed: step() retires them
+    all at admission (status expired), runs NO wave, and returns 0 — a
+    queue of dead requests never spins the loop."""
+    srv = DecodeServer(EchoLM(), {}, batch_slots=2, max_len=16)
+    reqs = [_req([3], max_new_tokens=2, deadline_s=0.0) for _ in range(3)]
+    for r in reqs:
+        srv.submit(r)
+    assert len(srv.queue) == 3
+    assert srv.step() == 0
+    assert srv.serve_stats["waves"] == 0
+    assert srv.serve_stats["expired"] == 3
+    assert not srv.queue
+    for r in reqs:
+        assert r.done and r.status == "expired"
+        assert "lapsed in queue" in r.error
+
+
+def test_all_slots_expire_in_one_wave_then_server_recovers():
+    """Budgets that pass admission but lapse during the (artificially
+    slowed) first wave: every active slot retires expired mid-wave, and a
+    later request is still served normally."""
+    from repro.runtime.faults import FaultInjector, FaultSpec
+    srv = DecodeServer(
+        EchoLM(), {}, batch_slots=2, max_len=16,
+        faults=FaultInjector([FaultSpec("wave", at=(1,), delay_s=0.4,
+                                        delay_only=True)]))
+    # budget wide enough to always survive admission on a loaded box, but
+    # narrower than the injected wave stall so it lapses *in service*
+    reqs = [_req([3], max_new_tokens=2, deadline_s=0.1),
+            _req([7], max_new_tokens=2, deadline_s=0.1)]
+    for r in reqs:
+        srv.submit(r)
+    srv.step()
+    for r in reqs:
+        assert r.done and r.status == "expired"
+        assert "lapsed in service" in r.error
+        assert r.t_first is None and not r.out
+    assert srv.serve_stats["expired"] == 2
+    late = _req([10], max_new_tokens=2)        # no deadline: must serve
+    srv.submit(late)
+    srv.run_until_drained()
+    assert late.status == "ok" and late.out == [11, 12]
+
+
+def test_deadline_past_at_admission_pops_next_request():
+    """One slot, two requests: the first expires at admission (not at
+    submit — no capacity calibration), and the SAME admission pass admits
+    the second into the slot."""
+    import time
+    srv = DecodeServer(EchoLM(), {}, batch_slots=1, max_len=16)
+    dead = _req([3], max_new_tokens=2, deadline_s=0.01)
+    live = _req([7], max_new_tokens=2)
+    srv.submit(dead)
+    srv.submit(live)
+    time.sleep(0.02)                           # dead's budget lapses queued
+    srv.run_until_drained()
+    assert dead.status == "expired" and not dead.out
+    assert live.status == "ok" and live.out == [8, 9]
+    assert srv.serve_stats["admitted"] == 1
+    # the wave count never stalled on the dead request
+    assert dead.admitted_wave is None
+
+
+def test_per_request_deadline_overrides_server_slo():
+    """Request.deadline_s wins over ttft_slo_s: a generous per-request
+    budget keeps a request alive that the server-wide SLO would expire."""
+    import time
+    srv = DecodeServer(EchoLM(), {}, batch_slots=1, max_len=16,
+                       ttft_slo_s=0.01)
+    r = _req([3], max_new_tokens=2, deadline_s=30.0)
+    srv.submit(r)
+    time.sleep(0.02)
+    srv.run_until_drained()
+    assert r.status == "ok" and r.out == [4, 5]
+
+
+# ---------------------------------------------------------------------------
 # Chunked prefill bit-identity (real LM)
 # ---------------------------------------------------------------------------
 
