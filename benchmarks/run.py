@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [characterization|dae_potential|ablation|
-blocksparse|vs_handopt|lm_step|steady_state|sharded|locality|serving]``.
+blocksparse|vs_handopt|lm_step|steady_state|sharded|locality|serving|
+disagg]``.
 
 ``--json PATH`` additionally writes every reported row (plus the cache
 stats) as machine-readable JSON — what CI consumes; ``-`` writes JSON to
@@ -16,7 +17,7 @@ import sys
 
 BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
            "vs_handopt", "lm_step", "steady_state", "sharded", "locality",
-           "serving"]
+           "serving", "disagg"]
 
 
 def main() -> None:

@@ -38,10 +38,12 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-#: (file, dotted metric path, direction[, mode]).  "lower" = lower is
-#: better, a +10% increase fails; "higher" = higher is better, a -10%
-#: drop fails.  mode "abs" (rates in [0, 1]) replaces the relative band
-#: with an absolute one: fresh may not exceed baseline + 0.10.
+#: (file, dotted metric path, direction[, mode[, tolerance]]).  "lower" =
+#: lower is better, a +10% increase fails; "higher" = higher is better, a
+#: -10% drop fails.  mode "abs" (rates in [0, 1]) replaces the relative
+#: band with an absolute one: fresh may not exceed baseline + tolerance.
+#: A per-metric tolerance (5th element) overrides the global 10% band for
+#: metrics that need a wider one (noisy wall-clock ratios).
 #: The exchange metrics are deterministic byte counts; the serving
 #: metrics are wall-clock service numbers (the 10% band absorbs machine
 #: noise at the smoke sizes tier1.sh --fast runs them at).
@@ -70,6 +72,14 @@ METRICS = (
     # the server got slower and the SLO admission is covering for it
     ("BENCH_serving.json", "open_loop.saturating.shed_rate", "lower",
      "abs"),
+    # disaggregated tier (PR 8): killing a replica mid-load must fail
+    # ZERO requests (baseline 0; abs mode means any failure trips), and
+    # the steady-state RPC overhead ratio must stay bounded — gated with
+    # a loose per-metric tolerance (5th element) since it is a wall-clock
+    # ratio of two small numbers
+    ("BENCH_disagg.json", "disagg.failed_requests", "lower", "abs"),
+    ("BENCH_disagg.json", "steady_state.overhead_ratio", "lower", "rel",
+     0.5),
 )
 
 TOLERANCE = 0.10
@@ -133,6 +143,7 @@ def main() -> int:
     for metric in METRICS:
         name, path, direction = metric[0], metric[1], metric[2]
         mode = metric[3] if len(metric) > 3 else "rel"
+        tol = metric[4] if len(metric) > 4 else TOLERANCE
         if name not in records:
             records[name] = _load_pair(name, malformed, config_mismatches,
                                        args.baseline_ref)
@@ -146,13 +157,13 @@ def main() -> int:
                   f"fresh={fresh} baseline={base})")
             continue
         if mode == "abs":
-            limit = base + TOLERANCE
+            limit = base + tol
             bad = fresh > limit
         elif direction == "lower":
-            limit = base * (1 + TOLERANCE)
+            limit = base * (1 + tol)
             bad = fresh > limit
         else:
-            limit = base * (1 - TOLERANCE)
+            limit = base * (1 - tol)
             bad = fresh < limit
         status = "FAIL" if bad else "ok"
         print(f"{status:4} {name}:{path} [{direction}"

@@ -43,10 +43,18 @@ if [[ "$FAST" == 1 ]]; then
   # ablation (asserts pipeline_group beats the sequential two-program
   # baseline), refreshes BENCH_serving.json
   python benchmarks/bench_serving.py --fast
+  # disaggregated embedding tier smoke: asserts disagg outputs are
+  # bit-identical to in-process, measures the steady-state RPC overhead
+  # ratio, and runs the kill-a-replica-mid-load leg (failover + respawn +
+  # checkpoint re-warm; failed_requests==0 required), refreshes
+  # BENCH_disagg.json
+  python benchmarks/bench_disagg.py --fast
   # chaos leg: the seeded fault-injection suite replayed under a pinned
   # seed — per-site executor recovery, wave watchdog + bounded retry,
-  # hardening policies.  The full pytest above already ran it once with
-  # the default seed; this replay pins the probabilistic schedules.
+  # hardening policies, and the rpc/service sites of the disaggregated
+  # tier (rpc_send/rpc_recv severing + service_crash respawn).  The full
+  # pytest above already ran it once with the default seed; this replay
+  # pins the probabilistic schedules.
   CHAOS_SEED=7 python -m pytest -x -q -p no:cacheprovider --fast \
-    tests/test_faults.py
+    tests/test_faults.py tests/test_disagg.py
 fi

@@ -1,3 +1,5 @@
-from .ckpt import CheckpointManager, save_checkpoint, restore_checkpoint
+from .ckpt import (CheckpointManager, committed_steps, latest_step,
+                   restore_checkpoint, save_checkpoint)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step", "committed_steps"]

@@ -20,6 +20,7 @@ synchronously — cheap — and written in the background).
 from __future__ import annotations
 
 import json
+import os
 import shutil
 import threading
 import time
@@ -51,7 +52,7 @@ def save_checkpoint(ckpt_dir, step: int, tree, *, host_index: int = 0):
                               isinstance(leaf, jax.Array) else 0).dtype)
                  if False else None,
                  "shards": []}
-        if isinstance(leaf, jax.Array) and hasattr(leaf, "addressable_shards"):
+        if hasattr(leaf, "addressable_shards"):  # jax.Array or _HostSnapshot
             entry["dtype"] = str(leaf.dtype)
             for j, shard in enumerate(leaf.addressable_shards):
                 if shard.replica_id != 0:
@@ -71,14 +72,58 @@ def save_checkpoint(ckpt_dir, step: int, tree, *, host_index: int = 0):
                 {"name": name, "index": [[0, s] for s in arr.shape]})
         manifest["leaves"].append(entry)
 
-    np.savez(tmp_dir / f"shard_{host_index:05d}.npz", **arrays)
-    (tmp_dir / "manifest.json").write_text(json.dumps(manifest))
-    # atomic publish: rename tmp → final, then commit marker
+    with open(tmp_dir / f"shard_{host_index:05d}.npz", "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(tmp_dir / "manifest.json", "w") as f:
+        f.write(json.dumps(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    # atomic publish.  Order matters for crash safety: a re-save of an
+    # already-committed step must retire the OLD marker before the old
+    # directory goes away — otherwise a crash between rmtree and rename
+    # leaves a committed marker pointing at nothing (the torn-save window;
+    # latest_step/restore_checkpoint additionally skip such torn steps).
+    marker = ckpt_dir / f"step_{step:09d}.COMMITTED"
+    marker.unlink(missing_ok=True)
     if step_dir.exists():
         shutil.rmtree(step_dir)
     tmp_dir.rename(step_dir)
-    (ckpt_dir / f"step_{step:09d}.COMMITTED").write_text(str(time.time()))
+    _fsync_dir(ckpt_dir)                  # make the rename durable
+    marker.write_text(str(time.time()))
+    _fsync_dir(ckpt_dir)                  # ... and the commit marker
     return step_dir
+
+
+def _fsync_dir(path: Path) -> None:
+    """Best-effort directory fsync (rename/unlink durability on POSIX)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _is_torn(ckpt_dir: Path, step: int) -> bool:
+    """A committed marker whose step directory (or manifest) is missing —
+    the pre-fix torn-save shape, or a crash mid-publish."""
+    return not (ckpt_dir / f"step_{step:09d}" / "manifest.json").exists()
+
+
+def committed_steps(ckpt_dir) -> list:
+    """All *intact* committed steps, ascending (torn steps excluded)."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    steps = sorted(int(p.stem.split("_")[1])
+                   for p in ckpt_dir.glob("step_*.COMMITTED"))
+    return [s for s in steps if not _is_torn(ckpt_dir, s)]
 
 
 def _norm_index(index, shape):
@@ -91,12 +136,11 @@ def _norm_index(index, shape):
 
 
 def latest_step(ckpt_dir) -> int | None:
-    ckpt_dir = Path(ckpt_dir)
-    if not ckpt_dir.exists():
-        return None
-    steps = [int(p.stem.split("_")[1])
-             for p in ckpt_dir.glob("step_*.COMMITTED")]
-    return max(steps) if steps else None
+    """The newest committed step whose directory is intact.  A torn step
+    (marker without dir/manifest — a crash inside the publish window) is
+    skipped, falling back to the previous committed step."""
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(ckpt_dir, tree_like, *, step: int = None,
@@ -105,10 +149,16 @@ def restore_checkpoint(ckpt_dir, tree_like, *, step: int = None,
     (if shardings is None) target shardings from its leaves."""
     ckpt_dir = Path(ckpt_dir)
     if step is None:
+        # latest_step already skips torn steps (marker without an intact
+        # directory), so this falls back to the newest restorable one
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
     step_dir = ckpt_dir / f"step_{step:09d}"
+    if not (step_dir / "manifest.json").exists():
+        raise FileNotFoundError(
+            f"checkpoint step {step} in {ckpt_dir} is torn "
+            f"(committed marker without manifest)")
     manifest = json.loads((step_dir / "manifest.json").read_text())
     data: dict = {}
     for f in step_dir.glob("shard_*.npz"):
@@ -141,27 +191,71 @@ def restore_checkpoint(ckpt_dir, tree_like, *, step: int = None,
     return tree_unflatten(treedef, out_leaves), step
 
 
+class _HostShard:
+    __slots__ = ("replica_id", "data", "index")
+
+    def __init__(self, replica_id, data, index):
+        self.replica_id = replica_id
+        self.data = data
+        self.index = index
+
+
+class _HostSnapshot:
+    """Host-memory copy of a ``jax.Array``'s addressable shards, taken
+    synchronously at :meth:`CheckpointManager.save` time.  The background
+    write thread must never touch the live device arrays: a donating
+    train step deletes those buffers as soon as the next step runs, and a
+    save racing that donation dies with "Array has been deleted"."""
+    __slots__ = ("dtype", "shape", "addressable_shards")
+
+    def __init__(self, x):
+        self.dtype = x.dtype
+        self.shape = x.shape
+        self.addressable_shards = [
+            _HostShard(s.replica_id, np.asarray(s.data), s.index)
+            for s in x.addressable_shards]
+
+
+def _host_snapshot(x):
+    if isinstance(x, jax.Array) and hasattr(x, "addressable_shards"):
+        return _HostSnapshot(x)
+    return np.asarray(x)
+
+
 class CheckpointManager:
     def __init__(self, ckpt_dir, keep: int = 3, async_save: bool = True):
         self.dir = Path(ckpt_dir)
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     def wait(self):
+        """Join an in-flight background save.  An exception the save thread
+        hit (a failed artifact write must never pass as durable) is
+        captured and re-raised HERE — and from the next :meth:`save`."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def save(self, step: int, tree):
-        self.wait()
+        self.wait()                     # re-raises a failed previous save
         # snapshot to host memory synchronously (cheap), write in background
-        host_tree = jax.tree.map(
-            lambda x: x if isinstance(x, jax.Array) else np.asarray(x), tree)
+        # — shard structure preserved, but NO live device references cross
+        # into the thread (donation in the next step would delete them)
+        host_tree = jax.tree.map(_host_snapshot, tree)
 
         def _do():
-            save_checkpoint(self.dir, step, host_tree)
-            self._gc()
+            try:
+                save_checkpoint(self.dir, step, host_tree)
+                self._gc()
+            except BaseException as e:   # noqa: BLE001 — daemon thread:
+                if not self.async_save:  # anything unre-raised is lost
+                    raise
+                self._error = e
 
         if self.async_save:
             self._thread = threading.Thread(target=_do, daemon=True)

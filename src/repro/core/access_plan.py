@@ -81,6 +81,25 @@ class MalformedAccessError(EmberFault, ValueError):
             + (f" ({detail})" if detail else ""))
 
 
+class RpcError(EmberFault):
+    """Disaggregated-tier transport failure (framing, closed socket).
+
+    Defined here with :class:`EmberFault` (not in :mod:`repro.runtime`)
+    because the executor's disaggregated submit path must classify it —
+    transport faults fail over / degrade, application faults propagate —
+    and core never imports runtime."""
+
+
+class RpcTimeout(RpcError):
+    """A per-call RPC deadline lapsed (``rpc_timeout_s``)."""
+
+
+class ServiceUnavailable(RpcError):
+    """Every embedding-service replica is dark after bounded retry; the
+    executor's ``degrade_policy`` decides whether the step serves locally
+    (hot slab / stale tables) or fails typed."""
+
+
 #: index-validation policies of the marshaling path (``strict`` raises a
 #: typed error; ``clamp``/``drop`` degrade per-lookup and count it)
 INDEX_POLICIES = ("strict", "clamp", "drop")

@@ -87,10 +87,18 @@ class StepHandle:
     index: int                    # step number within the executor
     done: bool = False
     faults: object = None         # chaos injector (site "result"), if any
+    # disaggregated steps: a zero-arg resolver for outputs still on the
+    # wire — the RPC left at submit, the reply is consumed here, so the
+    # submit/result overlap hides the extra hop exactly like it hides the
+    # device round trip
+    pending: object = None
 
     def result(self) -> dict:
         if self.faults is not None:
             self.faults.fire("result", step=self.index)
+        if self.pending is not None:
+            fn, self.pending = self.pending, None
+            self.outputs.update(fn())
         jax.block_until_ready(self.outputs)
         self.done = True
         return self.outputs
@@ -315,10 +323,16 @@ class ProgramExecutor:
                  replicate_outputs: Optional[bool] = None,
                  pool: Optional[BufferPool] = None,
                  index_policy: str = "strict",
-                 faults=None):
+                 faults=None, service: str = "inproc",
+                 service_pool=None, degrade_policy: str = "fail"):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
         assert index_policy in ap.INDEX_POLICIES, index_policy
+        assert service in ("inproc", "disagg"), service
+        assert degrade_policy in ("fail", "stale"), degrade_policy
+        if service == "disagg":
+            assert service_pool is not None, \
+                "service='disagg' requires a service_pool"
         self.compiled = compiled
         self.interpret = (kops.default_interpret() if interpret is None
                           else interpret)
@@ -343,6 +357,26 @@ class ProgramExecutor:
             replicate_outputs = self.exchange == "host"
         self.replicate_outputs = bool(replicate_outputs) \
             if self.shards > 1 else True
+        # disaggregated embedding tier: steps route to a replica pool
+        # (runtime.embedding_service.ServicePool-shaped, duck-typed so
+        # core never imports runtime) instead of executing here; the
+        # degrade policy decides what a step does while every replica is
+        # dark (ServiceUnavailable): hot-slab steps always serve locally,
+        # cold steps serve from the local tables under "stale" or fail
+        # typed under "fail"
+        self.service = service
+        self.service_pool = service_pool
+        self.degrade_policy = degrade_policy
+        assert not (service == "disagg" and sp.shard_count(
+            mesh, shard_axis) > 1), \
+            "disaggregated service is a single-shard client path"
+        # the replicated Zipf head: the slab a dark-shard step can serve
+        # locally (independent of the sharded hot/cold machinery below)
+        self._svc_hot = (
+            {n: np.unique(np.asarray(list(ids), dtype=np.int64))
+             for n, ids in dict(hot_rows).items()}
+            if (service == "disagg" and hot_rows) else {})
+        self._svc_srcs: Optional[tuple] = None  # tables last shipped
         # hot/cold vocab classification ({op name: replicated row ids});
         # only meaningful on sharded executors — see core/access_plan.py
         self.hot_rows = dict(hot_rows) if (hot_rows and self.shards > 1) \
@@ -373,7 +407,9 @@ class ProgramExecutor:
                       "exchange_index_bytes": 0, "exchange_row_bytes": 0,
                       "hot_lookups": 0, "cold_lookups": 0,
                       "host_syncs": 0, "oob_lookups": 0,
-                      "dropped_lookups": 0, "resets": 0}
+                      "dropped_lookups": 0, "resets": 0,
+                      "rpc_steps": 0, "hot_local_steps": 0,
+                      "stale_steps": 0, "degraded_failed_steps": 0}
 
     def _fire(self, site: str) -> None:
         if self.faults is not None:
@@ -902,12 +938,17 @@ class ProgramExecutor:
         while len(self._inflight) >= self.depth:
             self._inflight.popleft().result()
         self._slots_packed = []
-        self._txn = txn if self.shards == 1 else None
-        try:
-            outs = self._dispatch(inputs)
-        finally:
-            self._txn = None
-        h = StepHandle(outs, self._steps, faults=self.faults)
+        if self.service == "disagg":
+            outs, pending = self._submit_disagg(inputs)
+        else:
+            pending = None
+            self._txn = txn if self.shards == 1 else None
+            try:
+                outs = self._dispatch(inputs)
+            finally:
+                self._txn = None
+        h = StepHandle(outs, self._steps, faults=self.faults,
+                       pending=pending)
         for entry, turn in self._slots_packed:
             entry["owners"][turn] = h     # slot busy until h resolves
         self._steps += 1
@@ -922,6 +963,100 @@ class ProgramExecutor:
         h = self.submit(inputs)
         self._inflight.remove(h)
         return h.result()
+
+    # ------------------------------------------------------------------
+    # Disaggregated service path (service="disagg")
+    # ------------------------------------------------------------------
+
+    def _svc_tables(self, inputs: dict) -> dict:
+        return {name: inputs[name]["x" if op.kind == "fusedmm" else "table"]
+                for name, op in self.compiled.program.ops}
+
+    def _svc_sync(self, inputs: dict) -> None:
+        """Ship tables to the service pool on first step / object change —
+        the same identity discipline as :meth:`_bind_unit`: stable params
+        never re-ship, fresh arrays trigger an update (with the in-flight
+        remote steps drained first, so they land on the tables they were
+        submitted against)."""
+        tables = self._svc_tables(inputs)
+        srcs = tuple(tables.values())
+        if self._svc_srcs is not None and \
+                len(self._svc_srcs) == len(srcs) and \
+                all(a is b for a, b in zip(self._svc_srcs, srcs)):
+            return
+        host = {n: np.asarray(a) for n, a in tables.items()}
+        if self._svc_srcs is None:
+            self.service_pool.bind(
+                self.compiled.program, host,
+                opt_level=self.compiled.opt_level, vlen=self.compiled.vlen,
+                backend=self.backend, index_policy=self.index_policy,
+                interpret=self.interpret)
+            self.stats["table_stacks"] += 1
+        else:
+            self.drain()
+            self.service_pool.update_tables(host)
+            self.stats["table_rebinds"] += 1
+        self._svc_srcs = srcs
+
+    def _submit_disagg(self, inputs: dict):
+        """Send the step's offset streams to the service; the reply is
+        consumed at :meth:`StepHandle.result` via the handle's ``pending``
+        resolver.  :class:`~repro.core.access_plan.ServiceUnavailable`
+        (pool exhausted its bounded retry, every replica dark) resolves
+        per the degrade policy; every other fault propagates typed."""
+        self._svc_sync(inputs)
+        streams: dict = {}
+        for name, op in self.compiled.program.ops:
+            tkey = "x" if op.kind == "fusedmm" else "table"
+            for k, v in inputs[name].items():
+                if k != tkey:
+                    streams[f"{name}/{k}"] = np.asarray(v)
+        self.stats["rpc_steps"] += 1
+        try:
+            fut = self.service_pool.submit_step(streams)
+        except ap.ServiceUnavailable as e:
+            return self._degrade_outputs(inputs, e), None
+
+        def pending() -> dict:
+            try:
+                return fut.wait()
+            except ap.ServiceUnavailable as e:
+                return self._degrade_outputs(inputs, e)
+
+        return {}, pending
+
+    def _step_all_hot(self, inputs: dict) -> bool:
+        """True when every lookup of this step stays inside the replicated
+        Zipf head (the hot slab every client keeps locally)."""
+        if not self._svc_hot:
+            return False
+        for name, op in self.compiled.program.ops:
+            hot = self._svc_hot.get(name)
+            if hot is None:
+                return False
+            idxs = np.asarray(inputs[name].get("idxs", ()))
+            if idxs.size and not np.isin(idxs, hot).all():
+                return False
+        return True
+
+    def _degrade_outputs(self, inputs: dict, cause) -> dict:
+        """Resolve a step while the service tier is dark.  Hot-slab steps
+        always serve locally (the head is replicated client-side and kept
+        fresh); cold steps serve from the local table copy under
+        ``degrade_policy="stale"`` or re-raise typed under ``"fail"`` —
+        each path counted."""
+        if self._step_all_hot(inputs):
+            self.stats["hot_local_steps"] += 1
+        elif self.degrade_policy == "stale":
+            self.stats["stale_steps"] += 1
+        else:
+            self.stats["degraded_failed_steps"] += 1
+            raise cause
+        # local fallback execution: binds the local tables lazily on the
+        # first dark step (tables stack once, then it's the normal path)
+        outs = self._dispatch(inputs)
+        self._slots_packed = []
+        return outs
 
     def run_steps(self, steps) -> list:
         """Run a sequence of step inputs through the double-buffered loop;
@@ -1238,7 +1373,9 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  mesh=None, shard_axis: str = "model",
                  hot_rows=None, exchange: Optional[str] = None,
                  replicate_outputs: Optional[bool] = None,
-                 index_policy: str = "strict") -> ProgramExecutor:
+                 index_policy: str = "strict", service: str = "inproc",
+                 service_pool=None,
+                 degrade_policy: str = "fail") -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -1272,6 +1409,17 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     # canonicalize defaults so explicit-default calls hit the same entry
     interpret = kops.default_interpret() if interpret is None else interpret
     shards = sp.shard_count(mesh, shard_axis)
+    # disaggregated clients keep their hot-slab spec even on one shard
+    # (it's the local-serving slab, not the sharded hot/cold plan) — and
+    # the pool's identity keys the cache so two pools never share a
+    # client executor
+    service_hot = None
+    if service == "disagg":
+        assert service_pool is not None, \
+            "service='disagg' requires a service_pool"
+        assert shards == 1, \
+            "disaggregated service is a single-shard client path"
+        service_hot = hot_rows
     if shards == 1:
         mesh = None
         hot_rows = None
@@ -1287,7 +1435,10 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     hot_spec = ap.canonical_hot(hot_rows)
     key = (program.signature(), opt_level, vlen, interpret, budget, depth,
            backend, mesh, shard_axis if mesh is not None else None,
-           hot_spec, exchange, bool(replicate_outputs), index_policy)
+           hot_spec, exchange, bool(replicate_outputs), index_policy,
+           service, degrade_policy if service == "disagg" else None,
+           service_pool.pool_id if service_pool is not None else None,
+           ap.canonical_hot(service_hot))
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
@@ -1295,9 +1446,12 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                                hot_rows=hot_rows)
     ex = ProgramExecutor(compiled, interpret=interpret, depth=depth,
                          backend=backend, mesh=mesh, shard_axis=shard_axis,
-                         hot_rows=hot_rows, exchange=exchange,
+                         hot_rows=hot_rows if shards > 1 else service_hot,
+                         exchange=exchange,
                          replicate_outputs=replicate_outputs,
-                         index_policy=index_policy)
+                         index_policy=index_policy, service=service,
+                         service_pool=service_pool,
+                         degrade_policy=degrade_policy)
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 

@@ -22,16 +22,28 @@ Error taxonomy (all subclass :class:`EmberFault`):
   server's ``wave_deadline_s`` around ``submit_wave``/``StepHandle.result``.
 * :class:`RequestError` — a per-request serving failure carrying the
   request's terminal status; never escapes :meth:`DecodeServer.step`.
+* :class:`RpcError` — the disaggregated embedding tier's transport fault
+  root (framing violations, closed connections); defined in
+  :mod:`repro.core.access_plan` (the executor's disagg path classifies
+  it) and re-exported here; subclasses
+  :class:`RpcTimeout` (a per-call deadline lapsed) and
+  :class:`ServiceUnavailable` (every replica dark after bounded retry —
+  what the executor's ``degrade_policy`` resolves per step).
 
 Injection sites mirror the executor's DAE phases (and the runtimes above
 them)::
 
-    marshal   host index packing (ProgramExecutor._marshal_* / route_*)
-    transfer  host->device operand placement (ProgramExecutor._put*)
-    dispatch  step/wave launch (ProgramExecutor.submit)
-    result    the consume point (StepHandle.result)
-    wave      the serving wave body (DecodeServer.step)
-    step      the training step (Trainer.run)
+    marshal        host index packing (ProgramExecutor._marshal_*/route_*)
+    transfer       host->device operand placement (ProgramExecutor._put*)
+    dispatch       step/wave launch (ProgramExecutor.submit)
+    result         the consume point (StepHandle.result)
+    wave           the serving wave body (DecodeServer.step)
+    step           the training step (Trainer.run)
+    rpc_send       a step/bind request leaving the service client
+    rpc_recv       a reply arriving at the service client
+    heartbeat      one liveness probe of one replica (ServicePool)
+    service_crash  the service process's step loop (the replica self-kills
+                   abruptly — the ``kill -9`` shape, os._exit)
 
 The injector is *seeded* (probabilistic specs draw from one
 ``np.random.default_rng``) and *site-addressable* (each
@@ -47,14 +59,17 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-# the access-validation error is raised where validation happens (core);
-# re-exported here so runtimes/tests import one fault module
-from ..core.access_plan import EmberFault, MalformedAccessError
+# the access-validation and RPC-transport errors are raised (and, for the
+# transport family, classified by the executor's disaggregated submit
+# path) in core; re-exported here so runtimes/tests import one fault module
+from ..core.access_plan import (EmberFault, MalformedAccessError, RpcError,
+                                RpcTimeout, ServiceUnavailable)
 
 __all__ = [
     "EmberFault", "MalformedAccessError", "InjectedFailure",
-    "StragglerTimeout", "WaveTimeout", "RequestError", "FaultSpec",
-    "FaultInjector", "SITES",
+    "StragglerTimeout", "WaveTimeout", "RequestError", "RpcError",
+    "RpcTimeout", "ServiceUnavailable", "FaultSpec", "FaultInjector",
+    "SITES", "FAULT_TYPES",
 ]
 
 
@@ -79,8 +94,25 @@ class RequestError(EmberFault):
         self.status = status
 
 
+#: typed-error wire vocabulary: the service replies ``err`` frames naming
+#: one of these classes and the client re-raises the SAME type, so a
+#: service-side MalformedAccessError stays a MalformedAccessError at the
+#: caller (never a generic transport failure that would trigger failover)
+FAULT_TYPES = {
+    "EmberFault": EmberFault,
+    "MalformedAccessError": MalformedAccessError,
+    "InjectedFailure": InjectedFailure,
+    "StragglerTimeout": StragglerTimeout,
+    "WaveTimeout": WaveTimeout,
+    "RpcError": RpcError,
+    "RpcTimeout": RpcTimeout,
+    "ServiceUnavailable": ServiceUnavailable,
+}
+
+
 SITES: Tuple[str, ...] = ("marshal", "transfer", "dispatch", "result",
-                          "wave", "step")
+                          "wave", "step", "rpc_send", "rpc_recv",
+                          "heartbeat", "service_crash")
 
 
 @dataclasses.dataclass

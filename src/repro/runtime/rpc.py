@@ -1,0 +1,221 @@
+"""Length-prefixed typed RPC transport for the disaggregated embedding tier.
+
+The wire format is deliberately dumb — a framing layer, not a protocol
+stack — because everything above it (idempotent replay, failover, circuit
+breaking) lives in :mod:`repro.runtime.embedding_service` where it can be
+chaos-tested against the shared fault vocabulary:
+
+    +--------+----------+-----------+------------------+
+    | b"EMB1"| u32 hlen | u64 blen  | header | arrays  |
+    +--------+----------+-----------+------------------+
+
+``header`` is ``hlen`` bytes of JSON::
+
+    {"kind": "step", "meta": {...},
+     "arrays": [{"key": "...", "shape": [...], "dtype": "...",
+                 "nbytes": N}, ...]}
+
+followed by ``blen`` bytes of raw C-order array data, concatenated in
+manifest order.  numpy arrays round-trip losslessly (the bit-identity the
+disagg bench asserts); every other value rides the JSON ``meta``.
+
+Robustness properties of this layer alone:
+
+* **Per-call deadlines** — every receive tracks a wall-clock deadline
+  across partial reads; a lapse raises a typed :class:`RpcTimeout`
+  (transport-class: the caller's retry/failover loop may handle it).
+* **Typed error transport** — a ``kind="err"`` frame names a class from
+  :data:`repro.runtime.faults.FAULT_TYPES` and :func:`raise_typed`
+  re-raises the SAME type client-side, so a service-side
+  ``MalformedAccessError`` stays an application error (terminal for the
+  request) and is never mistaken for a dead replica.
+* **Chaos instrumentation** — :func:`send_msg`/:func:`recv_msg` fire the
+  ``rpc_send``/``rpc_recv`` injector sites before touching the socket, so
+  a seeded schedule can sever any call deterministically.
+
+:func:`backoff_delays` reproduces the exponential shape of
+``benchmarks/_mesh.run_with_spawn_retry`` (0, b, 2b, 4b, ...) for the
+client's bounded retry and the pool's replica respawn — one backoff
+policy across spawn and wire.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import time
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from .faults import FAULT_TYPES, RpcError, RpcTimeout
+
+__all__ = ["send_msg", "recv_msg", "raise_typed", "backoff_delays",
+           "Deadline", "RpcClient", "RpcError", "RpcTimeout"]
+
+MAGIC = b"EMB1"
+_HDR = struct.Struct(">4sIQ")
+
+#: frame-size ceilings: a corrupt length prefix must fail fast and typed,
+#: not attempt a multi-TiB allocation
+MAX_HEADER = 64 << 20
+MAX_BODY = 16 << 30
+
+
+def backoff_delays(attempts: int, backoff_s: float) -> Iterator[float]:
+    """The ``run_with_spawn_retry`` backoff shape: attempt k sleeps
+    ``backoff_s * 2**(k-1)`` first (k=0 sleeps nothing)."""
+    for k in range(attempts):
+        yield 0.0 if k == 0 else backoff_s * (2 ** (k - 1))
+
+
+class Deadline:
+    """A wall-clock budget shared across the partial reads of one call."""
+
+    def __init__(self, seconds: Optional[float]):
+        self.t_end = None if seconds is None else \
+            time.perf_counter() + seconds
+
+    def remaining(self) -> Optional[float]:
+        if self.t_end is None:
+            return None
+        left = self.t_end - time.perf_counter()
+        if left <= 0:
+            raise RpcTimeout("rpc deadline lapsed")
+        return left
+
+
+def _pack(kind: str, meta: Optional[dict], arrays: Optional[dict]
+          ) -> Tuple[bytes, list]:
+    manifest = []
+    bufs = []
+    for key, arr in (arrays or {}).items():
+        a = np.ascontiguousarray(arr)
+        manifest.append({"key": key, "shape": list(a.shape),
+                         "dtype": a.dtype.str, "nbytes": a.nbytes})
+        bufs.append(a)
+    header = json.dumps({"kind": kind, "meta": meta or {},
+                         "arrays": manifest}).encode()
+    return header, bufs
+
+
+def send_msg(sock: socket.socket, kind: str, meta: Optional[dict] = None,
+             arrays: Optional[dict] = None, *, faults=None) -> None:
+    """Frame and send one message.  Any failure surfaces as an ``OSError``
+    (the transport class the caller's failover loop catches); the
+    ``rpc_send`` chaos site fires first so a schedule can sever the call
+    before a byte moves."""
+    if faults is not None:
+        faults.fire("rpc_send", kind=kind)
+    header, bufs = _pack(kind, meta, arrays)
+    body_len = sum(b.nbytes for b in bufs)
+    sock.sendall(_HDR.pack(MAGIC, len(header), body_len))
+    sock.sendall(header)
+    for b in bufs:
+        sock.sendall(memoryview(b).cast("B"))
+
+
+def _recv_exact(sock: socket.socket, n: int, deadline: Deadline) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        sock.settimeout(deadline.remaining())
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except socket.timeout as e:
+            raise RpcTimeout("rpc deadline lapsed mid-frame") from e
+        if not chunk:
+            raise RpcError("connection closed mid-frame")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_msg(sock: socket.socket, *, deadline_s: Optional[float] = None,
+             faults=None) -> Tuple[str, dict, dict]:
+    """Receive one framed message → ``(kind, meta, arrays)``.
+
+    Raises :class:`RpcTimeout` when ``deadline_s`` lapses (across partial
+    reads, not per chunk) and :class:`RpcError` on framing violations or a
+    peer that closed mid-frame.  The ``rpc_recv`` chaos site fires before
+    the read, modeling a reply lost on the wire."""
+    if faults is not None:
+        faults.fire("rpc_recv")
+    deadline = Deadline(deadline_s)
+    magic, hlen, blen = _HDR.unpack(_recv_exact(sock, _HDR.size, deadline))
+    if magic != MAGIC:
+        raise RpcError(f"bad frame magic {magic!r}")
+    if hlen > MAX_HEADER or blen > MAX_BODY:
+        raise RpcError(f"frame sizes out of range (header={hlen} "
+                       f"body={blen})")
+    try:
+        header = json.loads(_recv_exact(sock, hlen, deadline))
+        kind = header["kind"]
+        meta = header["meta"]
+        manifest = header["arrays"]
+    except (ValueError, KeyError, TypeError) as e:
+        raise RpcError(f"malformed frame header: {e}") from e
+    arrays = {}
+    for entry in manifest:
+        raw = _recv_exact(sock, int(entry["nbytes"]), deadline)
+        arrays[entry["key"]] = np.frombuffer(
+            raw, dtype=np.dtype(entry["dtype"])
+        ).reshape(entry["shape"]).copy()
+    return kind, meta, arrays
+
+
+def raise_typed(meta: dict) -> None:
+    """Re-raise a service-side error frame as its original fault type."""
+    name = meta.get("error", "EmberFault")
+    msg = meta.get("msg", "")
+    cls = FAULT_TYPES.get(name, RpcError)
+    try:
+        raise cls(msg)
+    except TypeError:
+        # multi-arg constructors (MalformedAccessError) degrade to the
+        # base fault with the class name preserved in the message
+        raise FAULT_TYPES["EmberFault"](f"{name}: {msg}") from None
+
+
+class RpcClient:
+    """One connection to one replica: framed calls with per-call deadlines.
+
+    ``call`` is the synchronous convenience; ``send``/``recv_reply`` split
+    the round trip so the executor's submit/result overlap can hide the
+    hop (request leaves at ``submit``, reply is consumed at ``result``)."""
+
+    def __init__(self, host: str, port: int, *,
+                 timeout_s: Optional[float] = 5.0, faults=None):
+        self.addr = (host, int(port))
+        self.timeout_s = timeout_s
+        self.faults = faults
+        self.sock = socket.create_connection(self.addr, timeout=timeout_s)
+        # step frames are small and latency-bound: don't nagle them
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def send(self, kind: str, meta: Optional[dict] = None,
+             arrays: Optional[dict] = None) -> None:
+        send_msg(self.sock, kind, meta, arrays, faults=self.faults)
+
+    def recv_reply(self, deadline_s: Optional[float] = None
+                   ) -> Tuple[str, dict, dict]:
+        kind, meta, arrays = recv_msg(
+            self.sock,
+            deadline_s=self.timeout_s if deadline_s is None else deadline_s,
+            faults=self.faults)
+        if kind == "err":
+            raise_typed(meta)
+        return kind, meta, arrays
+
+    def call(self, kind: str, meta: Optional[dict] = None,
+             arrays: Optional[dict] = None,
+             deadline_s: Optional[float] = None) -> Tuple[dict, dict]:
+        self.send(kind, meta, arrays)
+        _, rmeta, rarrays = self.recv_reply(deadline_s)
+        return rmeta, rarrays
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass

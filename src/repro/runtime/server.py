@@ -109,7 +109,8 @@ class DecodeServer:
                  ttft_slo_s: Optional[float] = None,
                  wave_deadline_s: Optional[float] = None,
                  wave_retries: int = 1,
-                 faults=None):
+                 faults=None, service: str = "inproc",
+                 service_pool=None, degrade_policy: str = "fail"):
         assert index_policy in INDEX_POLICIES, index_policy
         self.lm = lm
         self.params = params
@@ -128,6 +129,17 @@ class DecodeServer:
         self.wave_deadline_s = wave_deadline_s
         self.wave_retries = max(0, int(wave_retries))
         self.faults = faults            # chaos injector (site "wave" here)
+        # disaggregated embedding tier: every member executor routes its
+        # steps to the service pool (cache-keyed on the pool's identity);
+        # a ServiceUnavailable surfacing from a wave is an EmberFault, so
+        # the wave watchdog's reset+retry already covers replica failover
+        assert service in ("inproc", "disagg"), service
+        self.service = service
+        self.service_pool = service_pool
+        self.degrade_policy = degrade_policy
+        self._svc_kw = ({"service": service, "service_pool": service_pool,
+                         "degrade_policy": degrade_policy}
+                        if service == "disagg" else {})
         self._ewma_wave_s: Optional[float] = None   # measured wave time
         # prompt-validation bound: stub LMs expose `vocab`, real ones cfg
         self._vocab = getattr(lm, "vocab", None) or getattr(
@@ -172,7 +184,7 @@ class DecodeServer:
             # (cache-keyed), so the pipeline's marshaling paths harden the
             # mirrored streams under the same policy as the prompts
             self.pipeline_group = lm.embedding_pipeline(
-                batch_slots, 1, index_policy=index_policy)
+                batch_slots, 1, index_policy=index_policy, **self._svc_kw)
             if faults is not None:
                 # group-level attach: cached member executors stay clean
                 self.pipeline_group.faults = faults
@@ -191,9 +203,10 @@ class DecodeServer:
 
     def _resolve_executor(self):
         if hasattr(self.lm, "embedding_executor"):
-            return self.lm.embedding_executor(self.slots, 1)
+            return self.lm.embedding_executor(self.slots, 1,
+                                              **self._svc_kw)
         return self._emb_exec.executor_for(
-            self.lm.embedding_program(self.slots, 1))
+            self.lm.embedding_program(self.slots, 1), **self._svc_kw)
 
     def _gather_compile_stats(self) -> dict:
         s = self._emberc.compile_cache_stats()

@@ -1,0 +1,181 @@
+"""Checkpoint durability: torn-save fallback, async error propagation,
+elastic re-shard restore.
+
+The torn-save window this pins down: re-saving an already-committed step
+used to delete the old step directory while its ``.COMMITTED`` marker was
+still published — a crash in that window left a marker pointing at
+nothing, and restore would die on the supposedly-committed step.  The fix
+retires the marker first and fsyncs the npz/manifest before publishing;
+``latest_step``/``restore_checkpoint`` additionally *skip* torn steps
+(marker without an intact directory) and fall back to the newest intact
+one, so even pre-fix damage restores.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, committed_steps,
+                              latest_step, restore_checkpoint,
+                              save_checkpoint)
+
+
+def _tree(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"emb": rng.normal(size=(16, 8)).astype(np.float32),
+            "bias": rng.normal(size=(8,)).astype(np.float32)}
+
+
+def _like() -> dict:
+    return {"emb": np.zeros((), np.float32), "bias": np.zeros((), np.float32)}
+
+
+def _assert_tree_equal(a: dict, b: dict) -> None:
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ---------------------------------------------------------------------------
+# Torn-save fallback
+# ---------------------------------------------------------------------------
+
+def test_torn_step_skipped_and_falls_back(tmp_path):
+    """A committed marker without an intact step directory (the crash
+    shapes the publish window can leave) is skipped: ``latest_step`` falls
+    back to the newest intact step and restore succeeds from it."""
+    d = tmp_path / "ckpt"
+    t1, t2 = _tree(1), _tree(2)
+    save_checkpoint(d, 1, t1)
+    save_checkpoint(d, 2, t2)
+    assert committed_steps(d) == [1, 2]
+
+    # tear step 2: marker present, manifest gone (crash mid-publish)
+    (d / "step_000000002" / "manifest.json").unlink()
+    assert committed_steps(d) == [1]
+    assert latest_step(d) == 1
+    restored, step = restore_checkpoint(d, _like())
+    assert step == 1
+    _assert_tree_equal(restored, t1)
+
+    # asking for the torn step explicitly is a typed, explicit failure
+    with pytest.raises(FileNotFoundError, match="torn"):
+        restore_checkpoint(d, _like(), step=2)
+
+
+def test_resave_retires_stale_marker_first(tmp_path):
+    """Re-saving an already-committed step passes through a window where
+    the step is *uncommitted* (marker retired before the old directory is
+    replaced), never one where a marker points at nothing — and the
+    completed re-save is intact with the new payload."""
+    d = tmp_path / "ckpt"
+    save_checkpoint(d, 5, _tree(1))
+    t_new = _tree(9)
+    save_checkpoint(d, 5, t_new)          # overwrite the same step
+    assert committed_steps(d) == [5]
+    restored, _ = restore_checkpoint(d, _like(), step=5)
+    _assert_tree_equal(restored, t_new)
+
+
+def test_all_steps_torn_is_no_checkpoint(tmp_path):
+    d = tmp_path / "ckpt"
+    save_checkpoint(d, 1, _tree(1))
+    (d / "step_000000001" / "manifest.json").unlink()
+    assert latest_step(d) is None
+    with pytest.raises(FileNotFoundError, match="no committed"):
+        restore_checkpoint(d, _like())
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager: async error propagation
+# ---------------------------------------------------------------------------
+
+def test_async_save_error_reraised_from_wait(tmp_path):
+    """A background save that fails (here: the checkpoint root is a FILE,
+    so the tmp-dir mkdir dies) must not pass silently as durable — the
+    captured error re-raises from wait()."""
+    root = tmp_path / "not_a_dir"
+    root.write_text("occupied")
+    mgr = CheckpointManager(root / "ckpt", async_save=True)
+    mgr.save(1, _tree(1))
+    with pytest.raises(OSError):
+        mgr.wait()
+    # the error is consumed: a later wait is clean
+    mgr.wait()
+
+
+def test_async_save_error_reraised_from_next_save(tmp_path):
+    root = tmp_path / "not_a_dir"
+    root.write_text("occupied")
+    mgr = CheckpointManager(root / "ckpt", async_save=True)
+    mgr.save(1, _tree(1))
+    with pytest.raises(OSError):
+        mgr.save(2, _tree(2))
+
+
+def test_sync_save_error_raises_immediately(tmp_path):
+    root = tmp_path / "not_a_dir"
+    root.write_text("occupied")
+    mgr = CheckpointManager(root / "ckpt", async_save=False)
+    with pytest.raises(OSError):
+        mgr.save(1, _tree(1))
+    # and is not ALSO queued for the next wait (no double raise)
+    mgr.wait()
+
+
+def test_async_save_success_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ckpt", async_save=True)
+    t = _tree(3)
+    mgr.save(7, t)
+    mgr.wait()
+    assert mgr.latest() == 7
+    restored, _ = mgr.restore(_like())
+    _assert_tree_equal(restored, t)
+
+
+def test_async_save_survives_donation(tmp_path):
+    """The save must snapshot device arrays to host *synchronously*: a
+    donating train step deletes the state buffers the moment the next
+    step runs, so a background thread still holding the live jax.Array
+    dies with "Array has been deleted" (the trainer race the swallowed
+    async errors used to hide)."""
+    import jax
+    import jax.numpy as jnp
+
+    mgr = CheckpointManager(tmp_path / "ckpt", async_save=True)
+    w = jnp.arange(64, dtype=jnp.float32)
+    expect = np.asarray(w)
+    mgr.save(1, {"w": w})
+    w.delete()          # what donation does to the buffer under the save
+    mgr.wait()          # must NOT re-raise "Array has been deleted"
+    restored, step = mgr.restore({"w": np.zeros((), np.float32)})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), expect)
+    assert isinstance(jax.tree_util.tree_leaves(restored)[0], np.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# Elastic restore: sharded save -> fewer-device restore
+# ---------------------------------------------------------------------------
+
+def test_elastic_restore_two_devices_to_one(run_on_mesh, tmp_path):
+    """A checkpoint written from a 2-device-sharded array restores onto a
+    single host array bit-identically — assembly is offset-based, not
+    device-based (the property the service warm artifact leans on: a
+    replica re-warms regardless of the mesh the tables were saved from)."""
+    run_on_mesh(f"""
+    import jax, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    mesh = Mesh(np.array(jax.devices()[:2]), ("model",))
+    full = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    sharded = jax.device_put(full, NamedSharding(mesh, P("model", None)))
+    save_checkpoint({str(tmp_path)!r}, 3, {{"emb": sharded}})
+
+    like = {{"emb": np.zeros((), np.float32)}}
+    restored, step = restore_checkpoint({str(tmp_path)!r}, like)
+    assert step == 3
+    out = np.asarray(restored["emb"])
+    assert out.shape == full.shape and (out == full).all()
+    print("ELASTIC_RESTORE_OK")
+    """, devices=2, sentinel="ELASTIC_RESTORE_OK")

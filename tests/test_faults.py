@@ -113,7 +113,8 @@ def test_unknown_site_rejected():
     with pytest.raises(AssertionError):
         FaultSpec("gpu-on-fire")
     assert set(SITES) == {"marshal", "transfer", "dispatch", "result",
-                          "wave", "step"}
+                          "wave", "step", "rpc_send", "rpc_recv",
+                          "heartbeat", "service_crash"}
 
 
 # ---------------------------------------------------------------------------
