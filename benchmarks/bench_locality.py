@@ -30,6 +30,20 @@ a 1-device host skips with a report line.  The executors run the default
 (collective) exchange; the recorded ``exchange_index_bytes`` are the
 *wire* volume of the all_to_all send lattice — hot lookups sit on its
 diagonal, which is exactly why the hot/cold reduction shows up there.
+
+The *non-stationary* leg (the adaptive-locality ablation) rotates the
+Zipf head to a disjoint row set every ``rotate_every`` steps and runs the
+same hot/cold layout two ways: a static slab classified once from the
+phase-0 calibration trace, and an adaptive executor
+(``AdaptiveHotConfig``) whose sliding-window re-classifier swaps the slab
+in place when the windowed hot hit-rate collapses.  Asserted: the static
+slab's routed exchange degrades >= 4x off its stationary optimum while
+the adaptive slab stays within 2x of it; every step stays allclose to the
+replicated oracle; the first step after each swap is bit-identical to a
+cold-built executor holding the same hot set AND allclose to the DLC
+interpreter oracle.  The leg also covers ``exchange="host"``, a
+spill-routing probe on a source-skewed stream, and a 1-replica
+disaggregated pool whose warm artifact is republished on swap.
 """
 from __future__ import annotations
 
@@ -66,6 +80,81 @@ def _zipf_sampler(rows: int, seed: int):
         return perm[step_rng.choice(rows, size=n, p=p)].astype(np.int32)
 
     return draw
+
+
+def _drifting_sampler(rows: int, seed: int, rotate_every: int):
+    """A Zipf(1.05) distribution whose head *rotates*: each phase of
+    ``rotate_every`` steps maps ranks to rows through the base permutation
+    cyclically shifted by ``3/8`` of the vocab — successive heads (the top
+    ``rows/8``) land on pairwise-disjoint row sets, so a slab classified in
+    one phase is stone cold in the next (the drift the adaptive
+    re-classifier must absorb)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(rows)
+    p = np.arange(1, rows + 1, dtype=np.float64) ** (-ZIPF_ALPHA)
+    p /= p.sum()
+
+    def draw(step_rng, n, step):
+        phase = step // rotate_every
+        shifted = np.roll(perm, -(phase * (rows * 3 // 8)) % rows)
+        return shifted[step_rng.choice(rows, size=n, p=p)].astype(np.int32)
+
+    return draw
+
+
+def build_drifting_workload(fast: bool, n_steps: int, rotate_every: int,
+                            seed: int = 0):
+    """(program, drifting steps, phase-0 calibration traces, skewed steps).
+
+    Same table bank as :func:`build_workload` but a denser stream (more
+    lookups per segment: the windowed re-classifier ranks the head from a
+    few steps of counts, so each window must actually sample it) drawn
+    from :func:`_drifting_sampler`.  The skewed steps put ~all lookups in
+    the first half of the *tables* — a lookup's source shard is its fused
+    segment slice, so that is the source imbalance that trips the spill
+    router's lattice-diagonal overload check."""
+    import numpy as np
+
+    from repro.core.ops import EmbeddingOp, EmbeddingProgram
+
+    if fast:
+        n_tbl, segs, rows, d, avg = 2, 16, 2048, 64, 32
+    else:
+        n_tbl, segs, rows, d, avg = 4, 32, 8192, 64, 32
+    prog = EmbeddingProgram("drift", tuple(
+        (f"tbl{i}", EmbeddingOp("sls", segs, rows, d, avg_lookups=avg))
+        for i in range(n_tbl)))
+
+    rng = np.random.default_rng(seed)
+    samplers = {name: _drifting_sampler(op.num_embeddings, seed + 17 * i,
+                                        rotate_every)
+                for i, (name, op) in enumerate(prog.ops)}
+    tables = {name: rng.standard_normal(
+        (op.num_embeddings, op.emb_len)).astype(np.float32)
+        for name, op in prog.ops}
+
+    def make_step(t, skew=False):
+        ins = {}
+        for i, (name, op) in enumerate(prog.ops):
+            if skew:
+                heavy = i < len(prog.ops) // 2
+                lens = np.full(op.num_segments,
+                               op.avg_lookups * 3 if heavy else 1, np.int64)
+            else:
+                lens = rng.poisson(op.avg_lookups, size=op.num_segments)
+            ptrs = np.zeros(op.num_segments + 1, np.int64)
+            np.cumsum(lens, out=ptrs[1:])
+            ins[name] = {"table": tables[name], "ptrs": ptrs,
+                         "idxs": samplers[name](rng, int(ptrs[-1]), t)}
+        return ins
+
+    steps = [make_step(t) for t in range(n_steps)]
+    skewed = [make_step(0, skew=True) for _ in range(8)]
+    cal_rng = np.random.default_rng(seed + 999)   # held-out, phase 0
+    traces = {name: samplers[name](cal_rng, 20_000, 0)
+              for name, _ in prog.ops}
+    return prog, steps, traces, skewed
 
 
 def build_workload(fast: bool, n_steps: int, seed: int = 0):
@@ -217,6 +306,198 @@ def run_variants(fast: bool, n_steps: int) -> dict:
     }
 
 
+ROTATE_EVERY = 24          # drift phase length (steps) of the adaptive leg
+DRIFT_PHASES = 3
+
+
+def _adaptive_cfg(**over):
+    from repro.data.locality import AdaptiveHotConfig
+    kw = dict(window_steps=6, num_windows=3, drift_threshold=0.7,
+              min_swap_interval=8, spill_fraction=0.0, refine_passes=1)
+    kw.update(over)
+    return AdaptiveHotConfig(**kw)
+
+
+def run_non_stationary(fast: bool) -> dict:
+    """The adaptive-locality ablation under a rotating Zipf head (see the
+    module docstring).  Returns the ``non_stationary`` record."""
+    import jax
+    import numpy as np
+
+    from repro.core import access_plan as ap
+    from repro.core import cost_model
+    from repro.core.executor import ProgramExecutor
+    from repro.core.pipeline import compile_program, run_program_interpreted
+    from repro.launch.mesh import axis_types_kw
+
+    shards = min(2, len(jax.devices()))
+    assert shards >= 2, "bench_locality needs >= 2 devices (see main())"
+    mesh = jax.make_mesh((1, shards), ("data", "model"),
+                         **axis_types_kw(2))
+    n_steps = ROTATE_EVERY * DRIFT_PHASES
+    prog, steps, traces, skewed = build_drifting_workload(
+        fast, n_steps, ROTATE_EVERY)
+    op0 = prog.ops[0][1]
+    hot_slab_bytes = (op0.num_embeddings // HOT_ROW_FRACTION) * \
+        op0.emb_len * 4
+    budget_hot = cost_model.FusionBudget(shards=shards,
+                                         hot_slab_bytes=hot_slab_bytes)
+    hot = ap.hot_rows_from_traces(prog, traces, budget_hot)
+    assert hot, "phase 0 must classify a hot head"
+
+    acfg = _adaptive_cfg()
+    repl = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
+                           backend="jax")
+    chot = compile_program(prog, "O3", use_cache=False, budget=budget_hot,
+                           hot_rows=hot)
+    static = ProgramExecutor(chot, backend="jax", mesh=mesh, hot_rows=hot)
+    adapt = ProgramExecutor(chot, backend="jax", mesh=mesh, hot_rows=hot,
+                            adaptive=acfg)
+    hostx = ProgramExecutor(chot, backend="jax", mesh=mesh, hot_rows=hot,
+                            exchange="host", adaptive=acfg)
+
+    opt_static = opt_adapt = None
+    prev_epoch, oracle_checks, pending_oracle = 0, 0, False
+    for t, ins in enumerate(steps):
+        want = {n: np.asarray(v) for n, v in repl.step(ins).items()}
+        got_s, got_a = static.step(ins), adapt.step(ins)
+        got_h = hostx.step(ins)
+        for n in want:
+            for tag, got in (("static", got_s), ("adaptive", got_a),
+                             ("adaptive_host", got_h)):
+                np.testing.assert_allclose(
+                    np.asarray(got[n]), want[n], rtol=1e-5, atol=1e-5,
+                    err_msg=f"{tag} {n} step {t}")
+        if pending_oracle and oracle_checks < 4:
+            # first step on the swapped slab: the no-recompile swap path
+            # must land exactly where a cold build with the same hot set
+            # lands (bit-identical), and match the DLC interpreter oracle
+            cold = ProgramExecutor(chot, backend="jax", mesh=mesh,
+                                   hot_rows=dict(adapt.hot_rows))
+            cold_out = cold.step(ins)
+            interp = run_program_interpreted(repl.compiled, ins)
+            for n in want:
+                np.testing.assert_array_equal(
+                    np.asarray(got_a[n]), np.asarray(cold_out[n]),
+                    err_msg=f"swap != cold path: {n} step {t}")
+                np.testing.assert_allclose(
+                    np.asarray(got_a[n]), np.asarray(interp[n]),
+                    rtol=1e-5, atol=1e-5,
+                    err_msg=f"swap vs interpreter oracle: {n} step {t}")
+            oracle_checks += 1
+        pending_oracle = adapt.slab_epoch > prev_epoch
+        prev_epoch = adapt.slab_epoch
+        if t == ROTATE_EVERY - 1:
+            # end of the stationary phase: this is the layout's optimum
+            opt_static = static.stats["exchange_index_bytes"]
+            opt_adapt = adapt.stats["exchange_index_bytes"]
+
+    post = n_steps - ROTATE_EVERY
+    opt_per_step = opt_static / ROTATE_EVERY
+    static_post = (static.stats["exchange_index_bytes"] - opt_static) / post
+    adapt_post = (adapt.stats["exchange_index_bytes"] - opt_adapt) / post
+    static_deg = static_post / max(opt_per_step, 1)
+    adapt_ratio = adapt_post / max(opt_per_step, 1)
+    post_hot_frac = adapt.window_stats()["hot_traffic_fraction"]
+    assert adapt.stats["hot_swaps"] >= 2, adapt.stats["hot_swaps"]
+    assert hostx.stats["hot_swaps"] >= 2, hostx.stats["hot_swaps"]
+    assert oracle_checks >= 1
+    assert static_deg >= 4.0, \
+        (f"static slab must degrade >= 4x under head rotation, got "
+         f"{static_deg:.2f}x ({static_post:.0f} vs {opt_per_step:.0f} "
+         f"B/step)")
+    assert adapt_ratio <= 2.0, \
+        (f"adaptive slab must stay within 2x of the stationary optimum, "
+         f"got {adapt_ratio:.2f}x ({adapt_post:.0f} vs {opt_per_step:.0f} "
+         f"B/step)")
+
+    # spill probe: a source-skewed stationary stream overloads shard 0's
+    # lattice diagonal; the router spills a bounded fraction of its hot
+    # lookups to the lighter peer, outputs unchanged
+    spillx = ProgramExecutor(
+        chot, backend="jax", mesh=mesh, hot_rows=hot,
+        adaptive=_adaptive_cfg(drift_threshold=0.05, min_swap_interval=10**6,
+                               spill_fraction=0.25, spill_overload=1.2,
+                               refine_passes=0))
+    for t, ins in enumerate(skewed):
+        want = repl.step(ins)
+        got = spillx.step(ins)
+        for n in want:
+            np.testing.assert_allclose(
+                np.asarray(got[n]), np.asarray(want[n]),
+                rtol=1e-5, atol=1e-5, err_msg=f"spill {n} step {t}")
+    assert spillx.stats["spilled_lookups"] > 0, \
+        "the skewed stream must trip the spill router"
+    assert spillx.stats["hot_swaps"] == 0
+
+    disagg = _run_disagg_drift(prog, steps[:ROTATE_EVERY + 16], hot)
+
+    return {
+        "rotate_every": ROTATE_EVERY,
+        "phases": DRIFT_PHASES,
+        "steps": n_steps,
+        "adaptive_config": {
+            "window_steps": acfg.window_steps,
+            "num_windows": acfg.num_windows,
+            "drift_threshold": acfg.drift_threshold,
+            "min_swap_interval": acfg.min_swap_interval,
+            "refine_passes": acfg.refine_passes,
+        },
+        "stationary_optimum_bytes_per_step": int(opt_per_step),
+        "static_routed_bytes_per_step": int(static_post),
+        "adaptive_routed_bytes_per_step": int(adapt_post),
+        "static_degradation": round(static_deg, 2),
+        "adaptive_ratio": round(adapt_ratio, 2),
+        "hot_swaps": adapt.stats["hot_swaps"],
+        "host_hot_swaps": hostx.stats["hot_swaps"],
+        "swap_oracle_checks": oracle_checks,
+        "post_drift_hot_hit_rate": post_hot_frac,
+        "spill_probe": {
+            "steps": len(skewed),
+            "spilled_lookups": spillx.stats["spilled_lookups"],
+        },
+        "disagg": disagg,
+    }
+
+
+def _run_disagg_drift(prog, steps, hot) -> dict:
+    """Drifting stream against a 1-replica disaggregated pool: the client
+    detects the drift from its own index streams, swaps its local slab,
+    and propagates it by republishing the warm artifact + a 'hot'
+    broadcast — observable as the replica's ping-reported hot_epoch.
+    Outputs stay bit-identical to the in-process executor."""
+    import numpy as np
+
+    from repro.core.executor import ProgramExecutor
+    from repro.core.pipeline import compile_program
+    from repro.runtime.embedding_service import ServicePool
+
+    ref = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
+                          backend="jax")
+    with ServicePool(1, rpc_timeout_s=30.0, backoff_s=0.01) as pool:
+        dx = ProgramExecutor(
+            compile_program(prog, "O3", use_cache=False), backend="jax",
+            service="disagg", service_pool=pool, hot_rows=hot,
+            adaptive=_adaptive_cfg())
+        for t, ins in enumerate(steps):
+            want = ref.step(ins)
+            got = dx.step(ins)
+            for n in want:
+                np.testing.assert_array_equal(
+                    np.asarray(got[n]), np.asarray(want[n]),
+                    err_msg=f"disagg {n} step {t}")
+        assert dx.stats["hot_swaps"] >= 1, dx.stats["hot_swaps"]
+        assert pool.pool_stats["hot_publishes"] >= 1
+        ping = pool.replicas[0].hb.call("ping")[0]
+        assert ping["hot_epoch"] == pool.pool_stats["hot_publishes"], ping
+        return {
+            "steps": len(steps),
+            "hot_swaps": dx.stats["hot_swaps"],
+            "hot_publishes": pool.pool_stats["hot_publishes"],
+            "replica_hot_epoch": ping["hot_epoch"],
+        }
+
+
 def run(report, fast: bool = True, n_steps: int = 3,
         out_path: Path = DEFAULT_OUT) -> dict:
     import jax
@@ -230,6 +511,14 @@ def run(report, fast: bool = True, n_steps: int = 3,
            rec["exchange_index_bytes_per_step"]["reduction"])
     report("locality/hot_traffic_fraction", 0,
            rec["hot_traffic_fraction"])
+    ns = run_non_stationary(fast)
+    rec["non_stationary"] = ns
+    report("locality/nonstat_static_degradation", 0,
+           ns["static_degradation"])
+    report("locality/nonstat_adaptive_ratio", 0, ns["adaptive_ratio"])
+    report("locality/nonstat_hot_swaps", 0, ns["hot_swaps"])
+    report("locality/nonstat_post_drift_hot_fraction", 0,
+           ns["post_drift_hot_hit_rate"])
     out_path.write_text(json.dumps(rec, indent=2))
     report("locality/json", 0, str(out_path))
     return rec
@@ -263,6 +552,12 @@ def main() -> None:
               f"({ex['reduction']:.2f}x less) with "
               f"{rec['hot_traffic_fraction']:.0%} of lookups served from "
               f"the replicated hot slab")
+        ns = rec["non_stationary"]
+        print(f"head rotation: static slab degrades "
+              f"{ns['static_degradation']:.2f}x off its stationary "
+              f"optimum; adaptive holds {ns['adaptive_ratio']:.2f}x with "
+              f"{ns['hot_swaps']} live swaps and post-drift hot hit-rate "
+              f"{ns['post_drift_hot_hit_rate']:.0%}")
 
 
 if __name__ == "__main__":

@@ -58,6 +58,14 @@ METRICS = (
      "exchange_ablation.collective.row_bytes_per_step", "lower"),
     ("BENCH_locality.json", "exchange_index_bytes_per_step.hot_cold",
      "lower"),
+    # adaptive hot slab (PR 9): under the drifting-head workload the
+    # re-classifier must keep routed exchange near the stationary optimum
+    # (bytes may not grow >10%) and the windowed hot hit-rate it recovers
+    # after the final head rotation may not drop >10%
+    ("BENCH_locality.json",
+     "non_stationary.adaptive_routed_bytes_per_step", "lower"),
+    ("BENCH_locality.json", "non_stationary.post_drift_hot_hit_rate",
+     "higher"),
     # serving loop (PR 6): p99 service latency must not inflate, and
     # neither open-loop throughput nor the cross-program pipeline's
     # tokens/sec may fall behind the committed baseline

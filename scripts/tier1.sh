@@ -35,7 +35,12 @@ if [[ "$FAST" == 1 ]]; then
   python benchmarks/bench_sharded.py --fast --exchange=both
   # locality-aware hot/cold sharding smoke (same respawn pattern): asserts
   # outputs identical to the interleaved PR-3 path AND >= 2x less routed
-  # exchange volume on the Zipf stream, refreshes BENCH_locality.json
+  # exchange volume on the Zipf stream; the non-stationary leg rotates the
+  # Zipf head every N steps and asserts the adaptive re-classifier holds
+  # routed exchange <= 2x the stationary optimum (static degrades >= 4x)
+  # with outputs bit-identical to a cold-built oracle across every slab
+  # swap, incl. collective+host exchange, the spill router and the disagg
+  # republish path; refreshes BENCH_locality.json
   python benchmarks/bench_locality.py --fast
   # open-loop serving smoke: continuous-batching server under Poisson load
   # at 2 QPS points + a 16x overload point (asserts the SLO admission

@@ -181,6 +181,22 @@ class AccessPlan:
     need_vals: bool
     unit_weight: float            # ⊗-identity for unit-weight upcast
     hot_spec: tuple = ()          # canonical_hot() the plan was built with
+    #: monotone slab generation: bumped on every adaptive hot-slab swap so
+    #: marshaling can assert it interprets the plan the tables were stacked
+    #: under (an epoch mismatch means a stale plan — a correctness bug)
+    epoch: int = 0
+    #: hot-spill table ``{src_shard: (dst_shard, fraction)}`` — when a
+    #: source shard's lattice diagonal is overloaded, route this bounded
+    #: fraction of its hot lookups to the named (least-loaded) peer.  The
+    #: slab is replicated, so reassigning a hot lookup's owner is always
+    #: legal; it merely moves the lookup off the diagonal onto the wire.
+    #: Mutable feedback state: the executor refreshes it from the previous
+    #: step's ``pair_counts`` (never shared across executors).
+    spill: dict = dataclasses.field(default_factory=dict, repr=False)
+    #: starting shard of the host-path round-robin hot owner assignment;
+    #: the executor points it at the shard with the lightest routed bucket
+    #: observed on the previous step.
+    rr_start: int = 0
     _kg_ptrs: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------
@@ -552,7 +568,7 @@ class AccessPlan:
         s = self.shards
         parts, nnz, _ = self.csr_parts(inputs)
         segs, owners, locals_, vals = [], [], [], []
-        hot_nnz, rr = 0, 0
+        hot_nnz, rr = 0, int(self.rr_start) % s
         for m, p, n in parts:
             ins = inputs[m.name]
             segs.append(np.repeat(
@@ -604,7 +620,7 @@ class AccessPlan:
         idxs_out = np.zeros((s, B), np.int32)
         mask = np.zeros((s, B), np.float32)
         shard_ids = np.arange(s)[:, None]
-        hot_segments, rr = 0, 0
+        hot_segments, rr = 0, int(self.rr_start) % s
         for m in self.members:
             owner, local, nh, rr = self._resolve(
                 inputs[m.name]["idxs"], self.slots[m.slot], rr)
@@ -687,7 +703,8 @@ class AccessPlan:
         s = self.shards
         sc = self.seg_cap
         parts, nnz, _ = self.csr_parts(inputs)
-        segs_l, srcs_l, owners_l, locals_l, vals_l = [], [], [], [], []
+        segs_l, srcs_l, owners_l, locals_l, hots_l, vals_l = \
+            [], [], [], [], [], []
         hot_nnz = 0
         for m, p, n in parts:
             ins = inputs[m.name]
@@ -695,13 +712,19 @@ class AccessPlan:
                 np.arange(m.num_segments, dtype=np.int64) + m.seg_offset,
                 np.diff(p))
             src = np.minimum(seg // sc, s - 1)
+            slot = self.slots[m.slot]
             owner, local, nh, _ = self._resolve(
-                ins["idxs"], self.slots[m.slot], 0, hot_owner=src)
+                ins["idxs"], slot, 0, hot_owner=src)
             hot_nnz += nh
             segs_l.append(seg)
             srcs_l.append(src)
             owners_l.append(owner)
             locals_l.append(local)
+            if self.spill:
+                hots_l.append(
+                    np.zeros(n, bool)
+                    if slot.remap is None or not slot.hot_rows
+                    else slot.is_hot[np.asarray(ins["idxs"], np.int64)])
             if self.need_vals:
                 v = ins.get("vals")
                 vals_l.append(np.full(n, self.unit_weight,
@@ -713,6 +736,23 @@ class AccessPlan:
         src = cat(srcs_l, np.int64)
         owner = cat(owners_l, np.int64)
         local = cat(locals_l, np.int64)
+        # Hot-aware source spill: a hot lookup's owner is a free choice
+        # (the slab is replicated), so shed a bounded, deterministic
+        # prefix (stream order) of an overloaded source's hot lookups to
+        # its least-loaded peer — trading a little wire volume for
+        # diagonal balance.
+        spilled = 0
+        if self.spill and len(seg):
+            hot = cat(hots_l, bool)
+            for s0, (dst, frac) in self.spill.items():
+                s0, dst = int(s0) % s, int(dst) % s
+                if dst == s0:
+                    continue
+                sel = np.flatnonzero(hot & (src == s0))
+                k = int(len(sel) * min(max(float(frac), 0.0), 1.0))
+                if k:
+                    owner[sel[:k]] = dst
+                    spilled += k
         pair = np.zeros((s, s), np.int64)
         dst_seg = np.zeros((s, self.num_segments), np.int64)
         if len(seg):
@@ -733,6 +773,7 @@ class AccessPlan:
             "nnz": pair.sum(axis=0),
             "hot_nnz": hot_nnz,
             "cold_nnz": nnz - hot_nnz,
+            "spilled_nnz": spilled,
             "wire_nnz": int(pair.sum() - np.trace(pair)),
         }
 
@@ -811,8 +852,8 @@ def _build_slots(rows_per_slot: list, bases: list, shards: int,
 
 
 def build_plan(op: EmbeddingOp, group=None, shards: int = 1,
-               hot_rows=None, lattice: CapacityLattice = DEFAULT_LATTICE
-               ) -> AccessPlan:
+               hot_rows=None, lattice: CapacityLattice = DEFAULT_LATTICE,
+               epoch: int = 0) -> AccessPlan:
     """Build the AccessPlan of one compiled unit.
 
     ``group`` is the fusion pass's FusedGroup (duck-typed: ``members``,
@@ -836,7 +877,8 @@ def build_plan(op: EmbeddingOp, group=None, shards: int = 1,
             # kg included: a standalone kg op always consumes a vals stream
             # (fused groups instead fold kg into op.weighted via the upcast)
             need_vals=op.weighted or op.kind in ("spmm", "kg"),
-            unit_weight=1.0 if op.semiring.mul == "mul" else 0.0)
+            unit_weight=1.0 if op.semiring.mul == "mul" else 0.0,
+            epoch=epoch)
 
     fop = group.op
     blk = fop.block_rows if fop.kind == "gather" else 1
@@ -869,7 +911,7 @@ def build_plan(op: EmbeddingOp, group=None, shards: int = 1,
         members=tuple(members), slots=slots, roff=roff, lattice=lattice,
         need_vals=fop.weighted or fop.kind == "spmm",
         unit_weight=group.unit_weight,
-        hot_spec=canonical_hot(hot_rows))
+        hot_spec=canonical_hot(hot_rows), epoch=epoch)
 
 
 def plan_for_group(group, shards: int = 1, hot_rows=None) -> AccessPlan:

@@ -324,7 +324,8 @@ class ProgramExecutor:
                  pool: Optional[BufferPool] = None,
                  index_policy: str = "strict",
                  faults=None, service: str = "inproc",
-                 service_pool=None, degrade_policy: str = "fail"):
+                 service_pool=None, degrade_policy: str = "fail",
+                 adaptive=None):
         assert depth >= 1, depth
         assert backend in ("pallas", "jax"), backend
         assert index_policy in ap.INDEX_POLICIES, index_policy
@@ -382,6 +383,35 @@ class ProgramExecutor:
         self.hot_rows = dict(hot_rows) if (hot_rows and self.shards > 1) \
             else {}
         self._hot_spec = ap.canonical_hot(self.hot_rows)
+        # adaptive hot-slab re-classification (data.locality.AdaptiveHotConfig
+        # or None): a sliding window of per-row access counts drives live
+        # slab swaps (swap_hot_slab) and hot-aware spill routing.  The
+        # windowed hot/cold counters below are ALWAYS maintained — they are
+        # the drift observable window_stats() exposes to operators even on
+        # static executors.
+        from ..data.locality import AdaptiveHotConfig, WindowedCounts
+        if adaptive is not None and not isinstance(adaptive,
+                                                   AdaptiveHotConfig):
+            raise TypeError("adaptive must be an AdaptiveHotConfig or None")
+        self.adaptive = adaptive
+        _w = adaptive or AdaptiveHotConfig()
+        self._win_stride = max(1, _w.window_steps // _w.num_windows)
+        self._win_ring = np.zeros((_w.num_windows, 2), np.int64)  # hot, cold
+        self._win_slot = 0
+        self._win_steps = 0
+        self._win_full = False
+        self.slab_epoch = 0
+        self._adapt_counts = {}           # op name -> WindowedCounts
+        self._adapt_ref: Optional[float] = None  # post-swap reference rate
+        self._adapt_last_swap = 0
+        self._adapt_refine = 0            # settling passes still owed
+        if adaptive is not None:
+            for name, op in compiled.program.ops:
+                if (self.shards > 1 and name in self.hot_rows) or \
+                        (service == "disagg" and name in self._svc_hot):
+                    self._adapt_counts[name] = WindowedCounts(
+                        op.num_embeddings, adaptive.window_steps,
+                        adaptive.num_windows)
         self._shard_fns: dict = {}        # (unit_idx, bucket) -> jitted call
         self._units = [_UnitState(u) for u in compiled.units]
         for u in self._units:
@@ -409,7 +439,9 @@ class ProgramExecutor:
                       "host_syncs": 0, "oob_lookups": 0,
                       "dropped_lookups": 0, "resets": 0,
                       "rpc_steps": 0, "hot_local_steps": 0,
-                      "stale_steps": 0, "degraded_failed_steps": 0}
+                      "stale_steps": 0, "degraded_failed_steps": 0,
+                      "hot_swaps": 0, "hot_swaps_rejected": 0,
+                      "spilled_lookups": 0}
 
     def _fire(self, site: str) -> None:
         if self.faults is not None:
@@ -428,7 +460,12 @@ class ProgramExecutor:
         if plan is None or plan.shards != shards or \
                 plan.hot_spec != hot_spec:
             plan = ap.build_plan(u.res.op, u.group, shards=shards,
-                                 hot_rows=hot)
+                                 hot_rows=hot, epoch=self.slab_epoch)
+        elif self.adaptive is not None:
+            # adaptive executors mutate plan.spill / plan.rr_start as
+            # per-step feedback — never on the shared compiled artifact
+            plan = dataclasses.replace(plan, spill={}, rr_start=0,
+                                       epoch=self.slab_epoch)
         return plan
 
     @property
@@ -701,8 +738,11 @@ class ProgramExecutor:
         # replicated slab (local lookup on a round-robin shard)
         self.stats["exchange_index_bytes"] += \
             routed["cold_nnz"] * (8 if need_vals else 4)
-        self.stats["hot_lookups"] += routed["hot_nnz"]
-        self.stats["cold_lookups"] += routed["cold_nnz"]
+        self._note_hot_cold(routed["hot_nnz"], routed["cold_nnz"])
+        # next step's round-robin hot assignment starts at the shard whose
+        # routed bucket was lightest this step
+        if self.adaptive is not None:
+            plan.rr_start = int(np.argmin(routed["nnz"]))
         self._count_row_bytes(op, 1, plan)
         args = [u.table, u.roff, self._put_sharded(buf["ptrs"]),
                 self._put_sharded(buf["idxs"])]
@@ -735,8 +775,15 @@ class ProgramExecutor:
         # 8 (12 weighted) bytes — matching the gather path's seg+idx count
         self.stats["exchange_index_bytes"] += \
             routed["wire_nnz"] * (12 if need_vals else 8)
-        self.stats["hot_lookups"] += routed["hot_nnz"]
-        self.stats["cold_lookups"] += routed["cold_nnz"]
+        self._note_hot_cold(routed["hot_nnz"], routed["cold_nnz"])
+        self.stats["spilled_lookups"] += routed.get("spilled_nnz", 0)
+        # feedback for the NEXT step: when one source's diagonal bucket is
+        # overloaded, spill a bounded fraction of its hot lookups to the
+        # least-loaded peer (the slab is replicated — owner choice is free)
+        if self.adaptive is not None:
+            plan.spill = sp.compute_spill(routed["pair_counts"],
+                                          self.adaptive.spill_fraction,
+                                          self.adaptive.spill_overload)
         self._count_row_bytes(op, 1, plan)
         args = [u.table, u.roff, self._put_sharded(buf["ints"])]
         if need_vals:
@@ -771,8 +818,7 @@ class ProgramExecutor:
             args = [u.table, u.roff, self._put_sharded(buf["idxs"]),
                     self._put_sharded(buf["mask"])]
             bucket = ("gather",)
-        self.stats["hot_lookups"] += routed["hot_segments"]
-        self.stats["cold_lookups"] += routed["cold_segments"]
+        self._note_hot_cold(routed["hot_segments"], routed["cold_segments"])
         self._count_row_bytes(plan.op, blk, plan)
         fn = self._shard_fn(idx, u, bucket)
         return fn(*args)
@@ -906,6 +952,14 @@ class ProgramExecutor:
                 outs[u.unit.names[0]] = self._execute(u, dev, ml)
                 continue
             if self.shards > 1:
+                # epoch-checked marshaling: the plan interpreted here must
+                # be the one the device tables were stacked under — a
+                # mismatch means a half-applied slab swap
+                if u.plan.epoch != self.slab_epoch:
+                    raise RuntimeError(
+                        f"stale access plan (epoch {u.plan.epoch} != slab "
+                        f"epoch {self.slab_epoch}) — swap_hot_slab left a "
+                        f"unit behind")
                 fused = (self._run_gather_sharded(idx, u, uin)
                          if u.group.op.kind == "gather"
                          else self._run_csr_sharded(idx, u, uin))
@@ -938,6 +992,10 @@ class ProgramExecutor:
         while len(self._inflight) >= self.depth:
             self._inflight.popleft().result()
         self._slots_packed = []
+        if self._adapt_counts:
+            self._adapt_observe(inputs)
+            if self.service == "disagg":
+                self._note_svc_traffic(inputs)
         if self.service == "disagg":
             outs, pending = self._submit_disagg(inputs)
         else:
@@ -956,12 +1014,16 @@ class ProgramExecutor:
         self._inflight.append(h)
         self.stats["max_inflight"] = max(self.stats["max_inflight"],
                                          len(self._inflight))
+        self._win_tick()
+        if self.adaptive is not None:
+            self._adapt_tick()
         return h
 
     def step(self, inputs: dict) -> dict:
         """Synchronous convenience: submit + block on this step's result."""
         h = self.submit(inputs)
-        self._inflight.remove(h)
+        if h in self._inflight:     # an end-of-submit slab swap drains the
+            self._inflight.remove(h)    # queue before we get here
         return h.result()
 
     # ------------------------------------------------------------------
@@ -990,7 +1052,9 @@ class ProgramExecutor:
                 self.compiled.program, host,
                 opt_level=self.compiled.opt_level, vlen=self.compiled.vlen,
                 backend=self.backend, index_policy=self.index_policy,
-                interpret=self.interpret)
+                interpret=self.interpret,
+                hot_spec={n: tuple(int(i) for i in v)
+                          for n, v in self._svc_hot.items()} or None)
             self.stats["table_stacks"] += 1
         else:
             self.drain()
@@ -1092,6 +1156,213 @@ class ProgramExecutor:
         through those handles; new marshals draw from the shared rings."""
         self.pool = pool
 
+    # ------------------------------------------------------------------
+    # Adaptive locality: windowed counters, drift detection, slab swap
+    # ------------------------------------------------------------------
+
+    def _note_hot_cold(self, hot: int, cold: int) -> None:
+        """Count one routing's hot/cold split: cumulative (back-compat
+        stats) AND into the sliding-window ring drift detection reads."""
+        self.stats["hot_lookups"] += hot
+        self.stats["cold_lookups"] += cold
+        self._win_ring[self._win_slot, 0] += hot
+        self._win_ring[self._win_slot, 1] += cold
+
+    def _win_tick(self) -> None:
+        """Advance the hot/cold window ring by one step (rotating out the
+        oldest stripe each ``window_steps / num_windows`` steps)."""
+        self._win_steps += 1
+        if self._win_steps % self._win_stride == 0:
+            self._win_slot = (self._win_slot + 1) % len(self._win_ring)
+            if self._win_slot == 0:
+                self._win_full = True
+            self._win_ring[self._win_slot] = 0
+
+    def window_stats(self) -> dict:
+        """Hot/cold traffic over the last window — the drift observable.
+
+        Unlike the lifetime-cumulative ``stats["hot_lookups"]`` /
+        ``hot_traffic_fraction`` (kept for back-compat), these age out:
+        a head rotation shows up within one window instead of being
+        averaged into history.  The re-classifier and operators read the
+        same snapshot."""
+        hot = int(self._win_ring[:, 0].sum())
+        cold = int(self._win_ring[:, 1].sum())
+        total = hot + cold
+        span = self._win_stride * len(self._win_ring)
+        return {
+            "window_steps": span,
+            "steps_in_window": min(self._win_steps, span),
+            "window_full": self._win_full,
+            "hot_lookups": hot,
+            "cold_lookups": cold,
+            "hot_traffic_fraction": round(hot / total, 4) if total else 0.0,
+            "adaptive": self.adaptive is not None,
+            "slab_epoch": self.slab_epoch,
+            "hot_swaps": self.stats["hot_swaps"],
+            "hot_swaps_rejected": self.stats["hot_swaps_rejected"],
+            "spilled_lookups": self.stats["spilled_lookups"],
+            "reference_hot_fraction": self._adapt_ref,
+        }
+
+    def _note_svc_traffic(self, inputs: dict) -> None:
+        """Disagg steps never route shard-side, so an adaptive client feeds
+        the hot/cold window itself: each index stream is split against the
+        replicated head it keeps locally (``_svc_hot``)."""
+        for name, hot in self._svc_hot.items():
+            ins = inputs.get(name)
+            if ins is None or "idxs" not in ins:
+                continue
+            idxs = np.asarray(ins["idxs"]).ravel()
+            if idxs.size:
+                nh = int(np.isin(idxs, hot).sum())
+                self._note_hot_cold(nh, idxs.size - nh)
+
+    def _adapt_observe(self, inputs: dict) -> None:
+        """Feed the step's index streams into the per-op windowed row
+        counters (the re-classifier's ranking signal)."""
+        for name, wc in self._adapt_counts.items():
+            ins = inputs.get(name)
+            if ins is not None and "idxs" in ins:
+                wc.add(np.asarray(ins["idxs"]))
+
+    def _adapt_tick(self) -> None:
+        """Drift detection, once per step: compare the windowed hot
+        hit-rate against the reference captured over the first full window
+        after the last (re)classification; a collapse below
+        ``drift_threshold × reference`` re-ranks and swaps the slab."""
+        cfg = self.adaptive
+        if cfg is None or not self._adapt_counts or not self._win_full:
+            return
+        span = self._win_stride * len(self._win_ring)
+        if self._adapt_refine > 0:
+            # settling pass: the window has refilled since the reactive
+            # swap flushed it, so the ranking now sees purely post-swap
+            # traffic — re-rank to evict rows the contaminated (partially
+            # pre-drift) reactive ranking kept.  Drift detection stays
+            # paused while the slab is settling.
+            if self._win_steps % span == 0:
+                self._adapt_refine -= 1
+                self._reclassify()
+            return
+        hot = int(self._win_ring[:, 0].sum())
+        cold = int(self._win_ring[:, 1].sum())
+        if not hot + cold:
+            return
+        frac = hot / (hot + cold)
+        if self._adapt_ref is None:
+            self._adapt_ref = float(frac)
+            return
+        if frac >= cfg.drift_threshold * self._adapt_ref:
+            # healthy window: let a better-than-reference rate raise the bar
+            self._adapt_ref = max(self._adapt_ref, float(frac))
+            return
+        if self._steps - self._adapt_last_swap < cfg.min_swap_interval:
+            return
+        self._adapt_last_swap = self._steps
+        if self._reclassify():
+            # the reactive ranking saw pre-drift history: flush the window
+            # and counters so the settling passes rank on clean data
+            self._reset_windows()
+            self._adapt_refine = cfg.refine_passes
+
+    def _reset_windows(self) -> None:
+        """Flush the hot/cold ring and every per-op count sketch — called
+        after a reactive swap so settling passes rank on post-swap traffic
+        only."""
+        self._win_ring[:] = 0
+        self._win_slot = 0
+        self._win_steps = 0
+        self._win_full = False
+        for wc in self._adapt_counts.values():
+            wc.reset()
+
+    def _reclassify(self) -> bool:
+        """Re-rank each tracked op's hot set from its windowed counts and
+        swap the slab (size-preserving — see ``classify_hot_from_counts``).
+        Returns True when a swap actually happened."""
+        from ..data.locality import classify_hot_from_counts
+        prev = self.hot_rows if self.shards > 1 else self._svc_hot
+        new: dict = {}
+        for name, wc in self._adapt_counts.items():
+            prev_ids = np.asarray(sorted(int(i) for i in prev.get(name, ())),
+                                  np.int64)
+            if not len(prev_ids):
+                continue
+            ids = classify_hot_from_counts(wc.totals(), len(prev_ids),
+                                           prev_hot=prev_ids)
+            new[name] = tuple(int(i) for i in ids)
+        return bool(new) and self.swap_hot_slab(new)
+
+    def swap_hot_slab(self, hot_rows) -> bool:
+        """Swap the replicated hot slab in place: same shapes, new
+        membership.  The slab is *data* — per-slot hot counts (and so the
+        local table shape, the capacity lattice, and every memoized
+        ``_shard_fn``/scratch bucket) are unchanged, so the swap re-ranks
+        the plan and re-stacks the device tables through the
+        ``update_tables`` respecialization path without a single retrace.
+        A candidate set that WOULD change a slot's geometry (shared-table
+        slot unions can) is rejected and counted, never half-applied.
+        Returns True when a swap happened."""
+        new_hot = {n: tuple(int(i) for i in ids)
+                   for n, ids in dict(hot_rows).items()}
+        new_spec = ap.canonical_hot(new_hot)
+        if self.service == "disagg":
+            cur = ap.canonical_hot({n: tuple(int(i) for i in v)
+                                    for n, v in self._svc_hot.items()})
+            if new_spec == cur:
+                return False
+            self.drain()
+            self._svc_hot = {n: np.unique(np.asarray(list(ids), np.int64))
+                             for n, ids in new_hot.items()}
+            self.slab_epoch += 1
+            self.stats["hot_swaps"] += 1
+            self._adapt_ref = None
+            self._adapt_last_swap = self._steps
+            # propagate through the artifact-republish path so a respawned
+            # replica re-warms with the CURRENT slab (and live replicas
+            # learn the new spec without a table re-ship)
+            publish = getattr(self.service_pool, "publish_hot_spec", None)
+            if publish is not None:
+                publish(new_hot)
+            return True
+        if self.shards == 1 or new_spec == self._hot_spec:
+            return False
+        epoch = self.slab_epoch + 1
+        rebuilt: list = []
+        for u in self._units:
+            if u.group is None:
+                continue
+            plan = ap.build_plan(u.res.op, u.group, shards=self.shards,
+                                 hot_rows=new_hot, epoch=epoch)
+            old = u.plan
+            if plan.local_rows != old.local_rows or any(
+                    a.hot_rows != b.hot_rows or a.cap != b.cap
+                    for a, b in zip(plan.slots, old.slots)):
+                self.stats["hot_swaps_rejected"] += 1
+                return False
+            plan.rr_start, plan.spill = old.rr_start, dict(old.spill)
+            rebuilt.append((u, plan))
+        self.drain()    # restacked buffers must not be read by old steps
+        self.hot_rows, self._hot_spec = new_hot, new_spec
+        for u, plan in rebuilt:
+            u.plan = plan
+            if u.table is None:
+                continue
+            srcs = [r() for r in (u.src_refs or ())]
+            if not srcs or any(s is None for s in srcs):
+                u.table = None          # sources gone: rebind next step
+                continue
+            u.table = sp.shard_stack_tables(
+                [jnp.asarray(a) for a in srcs], plan, self.mesh,
+                self.shard_axis)
+            self.stats["table_restacks"] += 1
+        self.slab_epoch = epoch
+        self.stats["hot_swaps"] += 1
+        self._adapt_ref = None
+        self._adapt_last_swap = self._steps
+        return True
+
     def access_plan_stats(self) -> dict:
         """The compiled access side, observable: per-plan hot/cold layout,
         cost-model exchange estimate vs. the measured counters, and the
@@ -1130,6 +1401,9 @@ class ProgramExecutor:
             "exchange_index_bytes_est": est_idx,
             "exchange_savings_bytes": max(
                 0, est_idx - self.stats["exchange_index_bytes"]),
+            "hot_swaps": self.stats["hot_swaps"],
+            "spilled_lookups": self.stats["spilled_lookups"],
+            "window": self.window_stats(),
             "plan_build_s": round(sum(
                 r.duration_s for r in self.compiled.pass_records()
                 if r.name == "plan-access" and r.ran), 6),
@@ -1375,7 +1649,8 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  replicate_outputs: Optional[bool] = None,
                  index_policy: str = "strict", service: str = "inproc",
                  service_pool=None,
-                 degrade_policy: str = "fail") -> ProgramExecutor:
+                 degrade_policy: str = "fail",
+                 adaptive=None) -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -1405,7 +1680,14 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     the shard_map body; ``"host"`` is the PR-3/4 single-controller routed
     scatter.  ``replicate_outputs`` picks the pooled-output placement:
     reduce-scattered segment slices (collective default) or fully
-    replicated via psum/pmax (host default, and the escape hatch)."""
+    replicated via psum/pmax (host default, and the escape hatch).
+
+    ``adaptive`` (a :class:`repro.data.locality.AdaptiveHotConfig`) turns
+    the hot slab into a live cache: windowed per-row counters re-rank the
+    head when the windowed hot hit-rate collapses and swap the slab in
+    place (no recompile — see :meth:`ProgramExecutor.swap_hot_slab`), plus
+    hot-aware spill routing off overloaded lattice diagonals.  Hashable,
+    so it keys the executor cache like every other knob."""
     # canonicalize defaults so explicit-default calls hit the same entry
     interpret = kops.default_interpret() if interpret is None else interpret
     shards = sp.shard_count(mesh, shard_axis)
@@ -1438,7 +1720,7 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
            hot_spec, exchange, bool(replicate_outputs), index_policy,
            service, degrade_policy if service == "disagg" else None,
            service_pool.pool_id if service_pool is not None else None,
-           ap.canonical_hot(service_hot))
+           ap.canonical_hot(service_hot), adaptive)
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
@@ -1451,7 +1733,7 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                          replicate_outputs=replicate_outputs,
                          index_policy=index_policy, service=service,
                          service_pool=service_pool,
-                         degrade_policy=degrade_policy)
+                         degrade_policy=degrade_policy, adaptive=adaptive)
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 

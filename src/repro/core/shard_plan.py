@@ -108,6 +108,35 @@ def shard_stack_tables(parts: list, plan: AccessPlan, mesh,
     return jax.device_put(glob, table_row_sharding(mesh, axis))
 
 
+def compute_spill(pair_counts: np.ndarray, max_fraction: float,
+                  overload_ratio: float) -> dict:
+    """Hot-spill table from one step's ``(S_src, S_dst)`` pair counts.
+
+    The lattice diagonal is the hot (source-served) traffic; when a source
+    shard's diagonal exceeds ``overload_ratio ×`` the mean diagonal load,
+    a bounded ``max_fraction`` of its hot lookups should spill to its
+    least-loaded peer (by total routed column load).  Returns the
+    ``{src: (dst, fraction)}`` mapping
+    :meth:`~repro.core.access_plan.AccessPlan.route_csr_collective`
+    applies on the *next* step — the feedback edge of the executor's
+    spill-aware lattice fill."""
+    pair = np.asarray(pair_counts, np.int64)
+    s = pair.shape[0]
+    if s < 2 or max_fraction <= 0.0:
+        return {}
+    diag = np.diag(pair).astype(np.float64)
+    mean = diag.mean()
+    if mean <= 0:
+        return {}
+    load = pair.sum(axis=0).astype(np.float64)   # per-dst routed work
+    spill: dict = {}
+    for src in np.flatnonzero(diag > overload_ratio * mean):
+        peers = np.array([d for d in range(s) if d != src])
+        dst = int(peers[np.argmin(load[peers])])
+        spill[int(src)] = (dst, float(max_fraction))
+    return spill
+
+
 def put_sharded(arr: np.ndarray, mesh, axis: str) -> jax.Array:
     """Place a host ``(S, …)`` bucket array so shard ``s`` holds block ``s``
     of the leading dim: the host-exchange scatter (dim 0 = *destination*

@@ -9,6 +9,8 @@ benchmark and the DAE cost model.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 
@@ -101,6 +103,139 @@ def classify_hot(trace: np.ndarray, num_rows: int, max_hot: int) -> np.ndarray:
         return np.zeros(0, np.int64)
     order = np.lexsort((candidates, -scores[candidates]))
     return np.sort(candidates[order[:int(max_hot)]])
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveHotConfig:
+    """Knobs for the executor's sliding-window hot-slab re-classifier.
+
+    Frozen (hashable) so it can participate in executor cache keys.
+
+    * ``window_steps`` — span of the sliding window, in executor steps.
+    * ``num_windows`` — ring granularity: the window is a ring of this many
+      count sketches, each covering ``window_steps / num_windows`` steps;
+      rotating drops the oldest stripe so counts age out instead of
+      accumulating for the process lifetime.
+    * ``drift_threshold`` — swap trigger: re-classify when the windowed hot
+      hit-rate falls below ``drift_threshold ×`` the reference hit-rate
+      captured over the first full window after the last (re)classification.
+    * ``min_swap_interval`` — steps that must elapse between swaps, bounding
+      respecialization churn under oscillating traffic.
+    * ``spill_fraction`` — cap on the fraction of an overloaded source
+      shard's hot lookups that may spill to the least-loaded peer.
+    * ``spill_overload`` — a source shard's lattice diagonal counts as
+      overloaded when it exceeds this multiple of the mean diagonal load.
+    * ``refine_passes`` — settling re-ranks after a drift-triggered swap.
+      The reactive swap classifies on a window still partially filled with
+      pre-drift counts; the swap flushes the window, and each refine pass
+      re-ranks once the window has refilled with purely post-swap traffic,
+      evicting rows the contaminated ranking kept.
+    """
+    window_steps: int = 64
+    num_windows: int = 4
+    drift_threshold: float = 0.6
+    min_swap_interval: int = 32
+    spill_fraction: float = 0.25
+    spill_overload: float = 1.5
+    refine_passes: int = 1
+
+    def __post_init__(self):
+        if self.window_steps < self.num_windows or self.num_windows < 1:
+            raise ValueError("window_steps must be >= num_windows >= 1")
+        if not (0.0 < self.drift_threshold <= 1.0):
+            raise ValueError("drift_threshold must be in (0, 1]")
+        if not (0.0 <= self.spill_fraction <= 1.0):
+            raise ValueError("spill_fraction must be in [0, 1]")
+        if self.refine_passes < 0:
+            raise ValueError("refine_passes must be >= 0")
+
+
+class WindowedCounts:
+    """Per-row access counts over a sliding window of the last W steps.
+
+    A ring of ``num_windows`` count stripes; each stripe accumulates
+    ``window_steps // num_windows`` steps, then the ring advances and the
+    oldest stripe is cleared.  ``totals()`` sums the ring — a bounded-age
+    sketch of the recent head, unlike a lifetime-cumulative counter that
+    drowns drift under history."""
+
+    def __init__(self, num_rows: int, window_steps: int = 64,
+                 num_windows: int = 4):
+        if window_steps < num_windows or num_windows < 1:
+            raise ValueError("window_steps must be >= num_windows >= 1")
+        self.num_rows = int(num_rows)
+        self.window_steps = int(window_steps)
+        self.num_windows = int(num_windows)
+        self.stride = max(1, self.window_steps // self.num_windows)
+        self._ring = np.zeros((self.num_windows, self.num_rows), np.int64)
+        self._slot = 0
+        self._steps = 0          # lifetime steps observed
+        self._wrapped = False    # True once every stripe has been filled
+
+    @property
+    def full(self) -> bool:
+        """True once the ring spans a complete window."""
+        return self._wrapped
+
+    @property
+    def steps(self) -> int:
+        return self._steps
+
+    def add(self, rows: np.ndarray) -> None:
+        """Record one step's accessed row ids (any shape, any multiplicity).
+        Out-of-range ids are ignored (hardening repairs run downstream)."""
+        rows = np.asarray(rows, np.int64).ravel()
+        if len(rows):
+            rows = rows[(rows >= 0) & (rows < self.num_rows)]
+            np.add.at(self._ring[self._slot], rows, 1)
+        self._steps += 1
+        if self._steps % self.stride == 0:
+            self._slot = (self._slot + 1) % self.num_windows
+            if self._slot == 0:
+                self._wrapped = True
+            self._ring[self._slot] = 0
+
+    def totals(self) -> np.ndarray:
+        """Summed per-row counts across the ring (the windowed sketch)."""
+        return self._ring.sum(axis=0)
+
+    def reset(self) -> None:
+        self._ring[:] = 0
+        self._slot = 0
+        self._steps = 0
+        self._wrapped = False
+
+
+def classify_hot_from_counts(counts: np.ndarray, max_hot: int,
+                             prev_hot: np.ndarray = None) -> np.ndarray:
+    """Re-rank the hot set from windowed per-row counts.
+
+    Same contract as :func:`classify_hot` — top ``max_hot`` rows by count,
+    ties broken by row id, returned sorted ascending — but from live counts
+    instead of a calibration trace.  Because a swapped slab must keep every
+    slot's table shape constant (the lattice/executables are specialized on
+    sizes, not membership), the result is padded with ``prev_hot`` ids (in
+    their ranked order of recency-of-use, i.e. count-desc) so the returned
+    set has *exactly* ``len(prev_hot)`` rows whenever ``prev_hot`` is
+    given."""
+    counts = np.asarray(counts, np.int64)
+    if max_hot <= 0:
+        return np.zeros(0, np.int64)
+    candidates = np.flatnonzero(counts > 0)
+    order = np.lexsort((candidates, -counts[candidates]))
+    hot = candidates[order[:int(max_hot)]]
+    if prev_hot is not None:
+        prev_hot = np.asarray(prev_hot, np.int64)
+        want = len(prev_hot)
+        if len(hot) < want:
+            # keep previously-hot rows (highest windowed count first) to
+            # hold the set size — shape stability beats eviction here
+            fill = prev_hot[~np.isin(prev_hot, hot)]
+            fill = fill[np.argsort(-counts[fill], kind="stable")]
+            hot = np.concatenate([hot, fill[:want - len(hot)]])
+        else:
+            hot = hot[:want]
+    return np.sort(hot)
 
 
 def make_trace(num_vectors: int, num_accesses: int, locality: str = "L1",

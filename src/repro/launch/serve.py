@@ -47,9 +47,13 @@ def main():
     ap.add_argument("--ttft-slo", type=float, default=None, metavar="S",
                     help="server-wide TTFT budget (seconds); lapsed "
                          "requests expire, hopeless ones shed")
-    ap.add_argument("--capacity-rps", type=float, default=None,
+    ap.add_argument("--capacity-rps", default=None,
+                    type=lambda s: s if s == "auto" else float(s),
                     help="calibrated service capacity (requests/s) for "
-                         "submit-time predicted-wait shedding")
+                         "submit-time predicted-wait shedding, or 'auto' "
+                         "to self-calibrate from the measured wave-time "
+                         "EWMA after a warmup wave count (live estimate "
+                         "surfaced as serve_stats.capacity_rps_live)")
     ap.add_argument("--wave-deadline", type=float, default=None,
                     metavar="S", help="wave watchdog deadline (seconds)")
     ap.add_argument("--wave-retries", type=int, default=1)

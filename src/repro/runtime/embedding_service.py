@@ -159,6 +159,7 @@ class EmbeddingService:
         self.steps = 0
         self.replays = 0
         self.warm_source = "none"        # none | bind | artifact
+        self.hot_epoch = 0               # adaptive slab generation bound
         self._replay: dict = {}          # client id -> (seq, meta, arrays)
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -178,6 +179,9 @@ class EmbeddingService:
         self.tables = {op: {self.table_keys[op]: np.asarray(a)}
                        for op, a in tables.items()}
         self.warm_source = source
+        # the artifact carries the CURRENT hot spec: a respawned replica
+        # re-warms already knowing the post-swap slab generation
+        self.hot_epoch = int(meta.get("hot_epoch", 0))
 
     def try_warm(self) -> bool:
         """Boot-time re-warm: a complete artifact next to this replica
@@ -198,10 +202,16 @@ class EmbeddingService:
             return {"ok": True, "steps": self.steps, "pid": os.getpid(),
                     "bound": self.executor is not None,
                     "replays": self.replays,
-                    "warm_source": self.warm_source}, {}
+                    "warm_source": self.warm_source,
+                    "hot_epoch": self.hot_epoch}, {}
         if kind == "bind":
             self._bind_from(meta, arrays, source="bind")
             return {"ok": True, "warm_source": self.warm_source}, {}
+        if kind == "hot":
+            # adaptive slab swap: live replicas learn the new spec epoch
+            # without a table re-ship (the artifact was rewritten first)
+            self.hot_epoch = int(meta.get("hot_epoch", 0))
+            return {"ok": True, "hot_epoch": self.hot_epoch}, {}
         if kind == "update":
             if self.executor is None:
                 raise RpcError("update before bind")
@@ -424,6 +434,7 @@ class ServicePool:
             "replicas": replicas, "rpc_steps": 0, "retries": 0,
             "failovers": 0, "respawns": 0, "breaker_open": 0,
             "heartbeats": 0, "hb_misses": 0, "replays": 0,
+            "hot_publishes": 0,
             "recoveries_s": [], "warm_sources": []}
         for r in self.replicas:
             self._spawn(r)
@@ -634,11 +645,15 @@ class ServicePool:
     # -- data plane: bind / update / steps ---------------------------------
 
     def _bind_meta(self, program, tables, *, opt_level, vlen, backend,
-                   index_policy, interpret) -> dict:
+                   index_policy, interpret, hot_spec=None) -> dict:
         return {"program": program_to_spec(program), "opt_level": opt_level,
                 "vlen": vlen, "backend": backend,
                 "index_policy": index_policy, "interpret": bool(interpret),
-                "table_ops": sorted(tables)}
+                "table_ops": sorted(tables),
+                "hot_spec": ({n: sorted(int(i) for i in ids)
+                              for n, ids in dict(hot_spec).items()}
+                             if hot_spec else None),
+                "hot_epoch": 0}
 
     def bind(self, program, tables: dict, **bind_kw) -> None:
         """Ship program + tables to every live replica — but FIRST publish
@@ -665,6 +680,32 @@ class ServicePool:
                             self._table_version)
         self._bind_call = (meta, arrays)
         self._broadcast("update", {}, arrays)
+
+    def publish_hot_spec(self, hot_rows: dict) -> None:
+        """Propagate an adaptive hot-slab swap: rewrite the warm artifact's
+        ``program.json`` with the new spec + bumped epoch (atomic rename;
+        the table checkpoint is untouched — a swap re-ranks, it never
+        re-ships rows), then best-effort notify live replicas.  An all-dark
+        pool is tolerated: the artifact alone guarantees that any replica
+        respawned from this moment re-warms with the *current* slab."""
+        if self._bind_call is None:
+            raise RpcError("publish_hot_spec before bind")
+        meta, arrays = self._bind_call
+        meta = dict(meta)
+        meta["hot_spec"] = {n: sorted(int(i) for i in ids)
+                            for n, ids in dict(hot_rows).items()}
+        meta["hot_epoch"] = int(meta.get("hot_epoch", 0)) + 1
+        warm_dir = Path(self.warm_dir)
+        warm_dir.mkdir(parents=True, exist_ok=True)
+        tmp = warm_dir / ".program.json.tmp"
+        tmp.write_text(json.dumps(meta))
+        tmp.rename(warm_dir / "program.json")
+        self._bind_call = (meta, arrays)
+        self.pool_stats["hot_publishes"] += 1
+        try:
+            self._broadcast("hot", {"hot_epoch": meta["hot_epoch"]}, {})
+        except ServiceUnavailable:
+            pass    # dark pool: replicas pick the spec up on re-warm
 
     def _broadcast(self, kind: str, meta: dict, arrays: dict) -> None:
         sent = 0

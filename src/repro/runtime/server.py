@@ -105,7 +105,8 @@ class DecodeServer:
                  max_len: int = 256, eos_id: Optional[int] = None,
                  prefill_chunk: int = 8, pipeline: bool = False,
                  index_policy: str = "strict",
-                 capacity_rps: Optional[float] = None,
+                 capacity_rps=None,
+                 capacity_warmup_waves: int = 5,
                  ttft_slo_s: Optional[float] = None,
                  wave_deadline_s: Optional[float] = None,
                  wave_retries: int = 1,
@@ -123,7 +124,14 @@ class DecodeServer:
         # calibrated service capacity (requests/s at saturation — what
         # bench_serving.py's closed-loop calibration measures); drives the
         # submit-time predicted-wait shed.  None disables that check.
-        self.capacity_rps = capacity_rps
+        # "auto" self-calibrates from the measured wave-time EWMA after
+        # ``capacity_warmup_waves`` waves: capacity ≈ slots / (wave_s ×
+        # avg waves-per-request) — no closed-loop bench number needed.
+        self._capacity_auto = capacity_rps == "auto"
+        self.capacity_rps = None if self._capacity_auto else capacity_rps
+        self.capacity_warmup_waves = max(1, int(capacity_warmup_waves))
+        self._req_wave_spans = 0    # Σ (finished_wave - admitted_wave + 1)
+        self._req_span_count = 0
         # server-wide TTFT budget applied to requests without their own
         self.ttft_slo_s = ttft_slo_s
         self.wave_deadline_s = wave_deadline_s
@@ -160,7 +168,8 @@ class DecodeServer:
                             "slot_resets": 0, "queue_peak": 0,
                             "shed": 0, "expired": 0, "failed": 0,
                             "oob_prompt_tokens": 0, "wave_faults": 0,
-                            "wave_retries": 0, "watchdog_timeouts": 0}
+                            "wave_retries": 0, "watchdog_timeouts": 0,
+                            "capacity_rps_live": None}
         # Ember steady-state path: the decode step's irregular lookups
         # compile ONCE per (slots, 1) signature and the ProgramExecutor's
         # marshaling cache (device-resident stacked tables + roff streams)
@@ -356,6 +365,12 @@ class DecodeServer:
         req.done = True
         req.t_done = time.perf_counter()
         req.finished_wave = self.waves
+        if req.admitted_wave is not None:
+            # waves this request occupied a slot — the span the auto
+            # capacity estimate divides the wave throughput by
+            self._req_wave_spans += max(
+                1, req.finished_wave - req.admitted_wave + 1)
+            self._req_span_count += 1
         retired[i] = True
         self.serve_stats[status if status != "ok" else "finished"] += 1
 
@@ -515,7 +530,26 @@ class DecodeServer:
                     int(self._pos[i]) >= self.max_len:
                 self._finish(i, req, retired)
         self._recycle(retired)
+        # after the finish pass, so a drive whose requests all retire on
+        # the final wave still arms the estimate before draining
+        self._update_capacity()
         return sum(r is not None for r in self.active)
+
+    def _update_capacity(self) -> None:
+        """Live capacity estimate under ``capacity_rps="auto"``: each wave
+        serves up to ``slots`` requests concurrently, and a finished
+        request occupied its slot for its measured wave span, so sustained
+        throughput ≈ slots / (wave_s × avg waves-per-request).  Armed only
+        after the warmup wave count (cold-compile waves would poison the
+        EWMA) and at least one finished request."""
+        if not self._capacity_auto or self._ewma_wave_s is None or \
+                self.waves < self.capacity_warmup_waves or \
+                not self._req_span_count:
+            return
+        avg_span = self._req_wave_spans / self._req_span_count
+        est = self.slots / (self._ewma_wave_s * avg_span)
+        self.capacity_rps = est
+        self.serve_stats["capacity_rps_live"] = round(est, 2)
 
     def run_until_drained(self, max_steps: int = 100_000):
         steps = 0

@@ -1,0 +1,362 @@
+"""Adaptive hot-slab locality: windowed re-classification units, the live
+slab-swap path (no-recompile respecialization, epoch-checked marshaling,
+churn/leak plateau) on a forced 2-device mesh, drift propagation through
+the disaggregated artifact-republish path, and the DecodeServer
+``capacity_rps="auto"`` self-calibration.
+
+The swap machinery's core invariant under test: a swap changes slab
+*membership*, never slab *shape* — per-slot hot counts, capacities, local
+rows, memoized shard_fns and scratch buckets all stay constant, so ten
+swaps cost ten table restacks and zero retraces.
+"""
+import numpy as np
+import pytest
+
+from repro.core.executor import (ProgramExecutor, clear_executor_cache,
+                                 executor_for)
+from repro.core.ops import EmbeddingOp, EmbeddingProgram
+from repro.core.pipeline import compile_program
+from repro.core.shard_plan import compute_spill
+from repro.data.locality import (AdaptiveHotConfig, WindowedCounts,
+                                 classify_hot_from_counts)
+
+# ---------------------------------------------------------------------------
+# Windowed counters + re-ranking (pure units)
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_counts_age_out():
+    wc = WindowedCounts(8, window_steps=4, num_windows=2)
+    for _ in range(2):
+        wc.add([1, 1, 2])
+    assert not wc.full
+    assert wc.totals()[1] == 4 and wc.totals()[2] == 2
+    wc.add([3])
+    assert wc.totals()[1] == 4 and wc.totals()[3] == 1
+    # the 4th step completes the window; the ring rotates into (and
+    # clears) the stripe holding rows 1/2 — they age out entirely
+    wc.add([3])
+    assert wc.full
+    t = wc.totals()
+    assert t[1] == 0 and t[2] == 0 and t[3] == 2
+    wc.reset()
+    assert wc.totals().sum() == 0 and not wc.full and wc.steps == 0
+
+
+def test_windowed_counts_ignores_out_of_range():
+    wc = WindowedCounts(4, window_steps=2, num_windows=2)
+    wc.add([-1, 0, 3, 4, 99])
+    assert wc.totals().tolist() == [1, 0, 0, 1]
+
+
+def test_adaptive_config_validation():
+    with pytest.raises(ValueError):
+        AdaptiveHotConfig(window_steps=2, num_windows=4)
+    with pytest.raises(ValueError):
+        AdaptiveHotConfig(drift_threshold=0.0)
+    with pytest.raises(ValueError):
+        AdaptiveHotConfig(spill_fraction=1.5)
+    with pytest.raises(ValueError):
+        AdaptiveHotConfig(refine_passes=-1)
+    assert hash(AdaptiveHotConfig()) == hash(AdaptiveHotConfig())
+
+
+def test_classify_hot_from_counts_ranks_and_pads():
+    counts = np.zeros(10, np.int64)
+    counts[[7, 2, 5]] = [9, 9, 3]
+    # ties break by row id; result sorted ascending
+    assert classify_hot_from_counts(counts, 2).tolist() == [2, 7]
+    # prev_hot pads the set to EXACTLY its size (shape stability): row 5
+    # ranks on counts, then previously-hot 1/4 fill by their counts
+    prev = np.array([1, 4, 9])
+    got = classify_hot_from_counts(counts, 3, prev_hot=prev)
+    assert len(got) == 3 and {2, 7}.issubset(set(got.tolist()))
+    # more live candidates than prev size: truncates, never grows
+    got = classify_hot_from_counts(counts, 3, prev_hot=np.array([0]))
+    assert len(got) == 1
+
+
+def test_compute_spill_overload_detection():
+    balanced = np.array([[50, 5], [4, 52]])
+    assert compute_spill(balanced, 0.25, 1.5) == {}
+    skewed = np.array([[90, 2], [3, 10]])
+    assert compute_spill(skewed, 0.25, 1.5) == {0: (1, 0.25)}
+    # least-loaded peer by routed column load, 3-way
+    tri = np.zeros((3, 3), np.int64)
+    tri[0, 0], tri[1, 1], tri[2, 2] = 90, 10, 10
+    tri[0, 1] = 30                       # shard 1 is busier than shard 2
+    assert compute_spill(tri, 0.5, 1.5) == {0: (2, 0.5)}
+    assert compute_spill(skewed, 0.0, 1.5) == {}      # spill disabled
+    assert compute_spill(np.array([[9]]), 0.25, 1.5) == {}
+    assert compute_spill(np.zeros((2, 2), np.int64), 0.25, 1.5) == {}
+
+
+# ---------------------------------------------------------------------------
+# Executor surface (single device)
+# ---------------------------------------------------------------------------
+
+
+def _prog():
+    return EmbeddingProgram("adapt1", (
+        ("t", EmbeddingOp("sls", 4, 64, 8, avg_lookups=4)),))
+
+
+def test_executor_for_keys_on_adaptive_config():
+    clear_executor_cache()
+    prog = _prog()
+    a = executor_for(prog, backend="jax")
+    b = executor_for(prog, backend="jax", adaptive=AdaptiveHotConfig())
+    c = executor_for(prog, backend="jax",
+                     adaptive=AdaptiveHotConfig(window_steps=8))
+    assert a is not b and b is not c
+    assert executor_for(prog, backend="jax",
+                        adaptive=AdaptiveHotConfig()) is b
+
+
+def test_adaptive_rejects_wrong_type():
+    with pytest.raises(TypeError):
+        ProgramExecutor(compile_program(_prog(), "O1", use_cache=False),
+                        backend="jax", adaptive=object())
+
+
+def test_single_shard_swap_is_a_noop():
+    ex = ProgramExecutor(compile_program(_prog(), "O1", use_cache=False),
+                         backend="jax", adaptive=AdaptiveHotConfig())
+    assert ex.swap_hot_slab({"t": (1, 2, 3)}) is False
+    assert ex.slab_epoch == 0 and ex.stats["hot_swaps"] == 0
+    ws = ex.window_stats()
+    assert ws["adaptive"] and ws["slab_epoch"] == 0
+    assert ws["hot_lookups"] == 0 and ws["steps_in_window"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Live swap on a 2-device mesh: drift trigger, bit-identity, churn plateau
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_swap_two_devices(run_on_mesh):
+    code = """
+        import jax
+        import numpy as np
+        from repro.core import access_plan as ap
+        from repro.core import cost_model
+        from repro.core.executor import ProgramExecutor
+        from repro.core.ops import EmbeddingOp, EmbeddingProgram
+        from repro.core.pipeline import compile_program
+        from repro.data.locality import AdaptiveHotConfig
+        from repro.launch.mesh import axis_types_kw
+
+        mesh = jax.make_mesh((1, 2), ("data", "model"), **axis_types_kw(2))
+        rows, segs = 256, 8
+        prog = EmbeddingProgram("drift", (
+            ("a", EmbeddingOp("sls", segs, rows, 8, avg_lookups=6)),
+            ("b", EmbeddingOp("sls", segs, rows, 8, avg_lookups=6)),
+        ))
+        rng = np.random.default_rng(0)
+        tables = {n: rng.standard_normal((rows, 8)).astype(np.float32)
+                  for n, _ in prog.ops}
+
+        def step_ins(lo, hi):
+            ins = {}
+            for n, op in prog.ops:
+                lens = np.full(segs, op.avg_lookups, np.int64)
+                ptrs = np.zeros(segs + 1, np.int64)
+                np.cumsum(lens, out=ptrs[1:])
+                ins[n] = {"table": tables[n], "ptrs": ptrs,
+                          "idxs": rng.integers(lo, hi, int(ptrs[-1])
+                                               ).astype(np.int32)}
+            return ins
+
+        hot = {n: tuple(range(32)) for n, _ in prog.ops}
+        cfg = AdaptiveHotConfig(window_steps=4, num_windows=2,
+                                drift_threshold=0.6, min_swap_interval=4,
+                                spill_fraction=0.0, refine_passes=0)
+        chot = compile_program(prog, "O3", use_cache=False, hot_rows=hot,
+                               budget=cost_model.FusionBudget(shards=2))
+        ref = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
+                              backend="jax")
+        ex = ProgramExecutor(chot, backend="jax", mesh=mesh, hot_rows=hot,
+                             adaptive=cfg)
+
+        def check(ins):
+            want, got = ref.step(ins), ex.step(ins)
+            for n in want:
+                np.testing.assert_allclose(
+                    np.asarray(got[n]), np.asarray(want[n]),
+                    rtol=1e-5, atol=1e-5, err_msg=n)
+
+        for _ in range(6):                     # reference window: all hot
+            check(step_ins(0, 32))
+        ws = ex.window_stats()
+        assert ws["window_full"] and ws["hot_traffic_fraction"] == 1.0
+        assert ws["reference_hot_fraction"] == 1.0
+        for _ in range(8):                     # drift: disjoint head
+            check(step_ins(64, 96))
+        assert ex.stats["hot_swaps"] >= 1, ex.stats
+        assert ex.slab_epoch >= 1
+        swapped = {n: set(v) for n, v in ex.hot_rows.items()}
+        for n in swapped:                      # re-ranked onto the new head
+            assert len(swapped[n]) == 32
+            assert swapped[n] & set(range(64, 96))
+        # windowed counters age out (satellite: drift visible within one
+        # window) while cumulative stats stay blended
+        for _ in range(6):
+            check(step_ins(64, 96))
+        ws = ex.window_stats()
+        assert ws["hot_traffic_fraction"] > 0.5
+        cum = ex.stats["hot_lookups"] / (
+            ex.stats["hot_lookups"] + ex.stats["cold_lookups"])
+        assert cum < ws["hot_traffic_fraction"]   # history stays blended
+
+        # first post-swap outputs == a cold-built executor with the same
+        # hot set, bit for bit (the swap path IS the cold path)
+        cold = ProgramExecutor(chot, backend="jax", mesh=mesh,
+                               hot_rows=dict(ex.hot_rows))
+        ins = step_ins(0, rows)
+        got, want = ex.step(ins), cold.step(ins)
+        for n in want:
+            np.testing.assert_array_equal(np.asarray(got[n]),
+                                          np.asarray(want[n]), err_msg=n)
+
+        # ------- churn: >= 10 direct swaps must plateau every cache ------
+        hot_a = {n: tuple(range(32)) for n, _ in prog.ops}
+        hot_b = {n: tuple(range(100, 132)) for n, _ in prog.ops}
+        ex.step(step_ins(0, rows))
+        fns0 = len(ex._shard_fns)
+        pool0 = ex.pool.stats["entries"]
+        restacks0 = ex.stats["table_restacks"]
+        for i in range(10):
+            assert ex.swap_hot_slab(hot_a if i % 2 else hot_b)
+            check(step_ins(0, rows))
+        assert ex.stats["hot_swaps"] >= 11
+        assert len(ex._shard_fns) == fns0          # zero retraces
+        assert ex.pool.stats["entries"] == pool0   # no leaked staging
+        assert ex.stats["table_restacks"] >= restacks0 + 10
+        for u in ex._units:
+            if u.group is not None:
+                assert u.plan.epoch == ex.slab_epoch
+
+        # geometry-changing candidate: rejected atomically, never applied
+        before = ex.slab_epoch
+        assert ex.swap_hot_slab({n: (0, 1) for n, _ in prog.ops}) is False
+        assert ex.stats["hot_swaps_rejected"] >= 1
+        assert ex.slab_epoch == before
+        check(step_ins(0, rows))
+
+        # epoch-checked marshaling: a stale plan fails loud, not stale
+        u = next(u for u in ex._units if u.group is not None)
+        u.plan.epoch -= 1
+        try:
+            ex.step(step_ins(0, rows))
+            raise AssertionError("stale plan must raise")
+        except RuntimeError as e:
+            assert "stale access plan" in str(e)
+        u.plan.epoch += 1
+        check(step_ins(0, rows))
+        print("ADAPTIVE_MESH_OK")
+    """
+    run_on_mesh(code, devices=2, sentinel="ADAPTIVE_MESH_OK")
+
+
+# ---------------------------------------------------------------------------
+# Disagg: swap republishes the artifact; a killed replica re-warms with it
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_swap_republish_and_rewarm():
+    import time
+
+    from repro.runtime.embedding_service import ServicePool
+
+    prog = _prog()
+    rng = np.random.default_rng(1)
+    table = rng.standard_normal((64, 8)).astype(np.float32)
+
+    def step_ins(lo, hi):
+        lens = np.full(4, 4, np.int64)
+        ptrs = np.zeros(5, np.int64)
+        np.cumsum(lens, out=ptrs[1:])
+        return {"t": {"table": table, "ptrs": ptrs,
+                      "idxs": rng.integers(lo, hi, 16).astype(np.int32)}}
+
+    ref = ProgramExecutor(compile_program(prog, "O3", use_cache=False),
+                          backend="jax")
+    cfg = AdaptiveHotConfig(window_steps=4, num_windows=2,
+                            drift_threshold=0.6, min_swap_interval=4,
+                            refine_passes=0)
+    with ServicePool(1, rpc_timeout_s=30.0, backoff_s=0.01) as pool:
+        ex = ProgramExecutor(
+            compile_program(prog, "O3", use_cache=False), backend="jax",
+            service="disagg", service_pool=pool,
+            hot_rows={"t": tuple(range(16))}, adaptive=cfg)
+
+        def check(ins):
+            want, got = ref.step(ins), ex.step(ins)
+            np.testing.assert_array_equal(np.asarray(got["t"]),
+                                          np.asarray(want["t"]))
+
+        for _ in range(6):                 # reference window: all hot
+            check(step_ins(0, 16))
+        for _ in range(8):                 # drift to a disjoint head
+            check(step_ins(32, 48))
+        assert ex.stats["hot_swaps"] >= 1
+        published = pool.pool_stats["hot_publishes"]
+        assert published >= 1
+        assert set(np.asarray(ex._svc_hot["t"])) & set(range(32, 48))
+
+        # kill the only replica right after the swap's republish; the
+        # revived replica must re-warm from the rewritten artifact --
+        # carrying the POST-swap slab spec, never the bind-time one
+        pool.kill_replica(0)
+        r = pool.replicas[0]
+        spawns0 = r.spawns
+        t0 = time.perf_counter()
+        # kill_replica leaves state "live" until heartbeats notice the dead
+        # socket, so drive them until the replica has actually respawned
+        # AND come back live
+        while r.spawns == spawns0 or r.state != "live":
+            pool.heartbeat_once()
+            time.sleep(0.05)
+            assert time.perf_counter() - t0 < 120, "revive timed out"
+        s = pool.stats()
+        assert s["warm_sources"][-1] == "artifact"
+        ping = pool.replicas[0].hb.call("ping")[0]
+        assert ping["hot_epoch"] == published
+        check(step_ins(0, 64))             # and it still serves, identical
+
+
+# ---------------------------------------------------------------------------
+# DecodeServer capacity_rps="auto" self-calibration
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_rps_auto_calibrates():
+    from test_server import EchoLM, _req
+
+    from repro.runtime.server import DecodeServer
+
+    srv = DecodeServer(EchoLM(), {}, batch_slots=2, max_len=32,
+                       capacity_rps="auto", capacity_warmup_waves=2)
+    assert srv.capacity_rps is None        # unarmed until warmup waves
+    reqs = [_req([i + 1], max_new_tokens=6) for i in range(4)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert srv.capacity_rps is not None and srv.capacity_rps > 0
+    live = srv.serve_stats["capacity_rps_live"]
+    assert live is not None and live == round(srv.capacity_rps, 2)
+
+
+def test_capacity_rps_fixed_stays_fixed():
+    from test_server import EchoLM, _req
+
+    from repro.runtime.server import DecodeServer
+
+    srv = DecodeServer(EchoLM(), {}, batch_slots=1, max_len=32,
+                       capacity_rps=5.0)
+    r = _req([1], max_new_tokens=3)
+    srv.submit(r)
+    srv.run_until_drained()
+    assert srv.capacity_rps == 5.0
+    assert srv.serve_stats["capacity_rps_live"] is None
