@@ -155,6 +155,7 @@ def _kill_leg(fast: bool) -> dict:
             "recovery_s": round(stats["recoveries_s"][-1], 3)
             if stats["recoveries_s"] else None,
             "rewarm_source": stats["warm_sources"][-1],
+            "compile_source": stats["compile_sources"][-1],
             "pool": {k: stats[k] for k in
                      ("failovers", "retries", "respawns", "breaker_open",
                       "heartbeats", "hb_misses")}}
@@ -169,6 +170,8 @@ def run_disagg(fast: bool) -> dict:
         f"replica kill failed {kill['failed_requests']} requests"
     assert kill["rewarm_source"] == "artifact", \
         "respawned replica did not re-warm from the checkpoint artifact"
+    assert kill["compile_source"] == "artifact", \
+        "respawned replica recompiled instead of loading the AOT artifact"
     return {"config": {"fast": fast, "arch": ARCH, "replicas": 2,
                        "rpc_timeout_s": POOL_KW["rpc_timeout_s"]},
             "bit_identity": identity,
@@ -186,7 +189,7 @@ def run(report, fast: bool = True, out_path: Path = DEFAULT_OUT) -> dict:
     k = rec["disagg"]
     report("disagg/kill_recovery_s", 0,
            f"recovery={k['recovery_s']}s failed={k['failed_requests']} "
-           f"rewarm={k['rewarm_source']}")
+           f"rewarm={k['rewarm_source']} compile={k['compile_source']}")
     report("disagg/kill_statuses", 0, k["statuses"])
     out_path.write_text(json.dumps(rec, indent=2))
     report("disagg/json", 0, str(out_path))

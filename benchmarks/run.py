@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [characterization|dae_potential|ablation|
 blocksparse|vs_handopt|lm_step|steady_state|sharded|locality|serving|
-disagg]``.
+disagg|coldstart]``.
 
 ``--json PATH`` additionally writes every reported row (plus the cache
 stats) as machine-readable JSON — what CI consumes; ``-`` writes JSON to
@@ -17,7 +17,7 @@ import sys
 
 BENCHES = ["characterization", "dae_potential", "ablation", "blocksparse",
            "vs_handopt", "lm_step", "steady_state", "sharded", "locality",
-           "serving", "disagg"]
+           "serving", "disagg", "coldstart"]
 
 
 def main() -> None:

@@ -88,6 +88,13 @@ METRICS = (
     ("BENCH_disagg.json", "disagg.failed_requests", "lower", "abs"),
     ("BENCH_disagg.json", "steady_state.overhead_ratio", "lower", "rel",
      0.5),
+    # AOT serving artifact (PR 10): the artifact-loaded boot's TTFT may
+    # not grow >10%, and its outputs must stay bit-identical to a fresh
+    # compile — gated with zero relative tolerance (baseline 1; "abs"
+    # would only bound above, so a 1 -> 0 flip must trip the rel band)
+    ("BENCH_coldstart.json", "artifact_boot.ttft_s", "lower"),
+    ("BENCH_coldstart.json", "artifact_boot.bit_identical", "higher",
+     "rel", 0.0),
 )
 
 TOLERANCE = 0.10

@@ -54,6 +54,12 @@ if [[ "$FAST" == 1 ]]; then
   # checkpoint re-warm; failed_requests==0 required), refreshes
   # BENCH_disagg.json
   python benchmarks/bench_disagg.py --fast
+  # cold-start smoke: boots the same program three ways in subprocesses
+  # (cold compile / in-process warm caches / AOT serving artifact) and
+  # asserts the artifact boot loads instead of compiling
+  # (compile_source=artifact, zero AOT compiles), is bit-identical to the
+  # fresh compile, and >= 3x faster TTFT; refreshes BENCH_coldstart.json
+  python benchmarks/bench_coldstart.py --fast
   # chaos leg: the seeded fault-injection suite replayed under a pinned
   # seed — per-site executor recovery, wave watchdog + bounded retry,
   # hardening policies, and the rpc/service sites of the disaggregated

@@ -1,5 +1,7 @@
-from .ckpt import (CheckpointManager, committed_steps, latest_step,
-                   restore_checkpoint, save_checkpoint)
+from .ckpt import (CheckpointManager, atomic_write_text, committed_steps,
+                   latest_step, publish_dir, restore_checkpoint,
+                   save_checkpoint)
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "latest_step", "committed_steps"]
+           "latest_step", "committed_steps", "atomic_write_text",
+           "publish_dir"]

@@ -80,20 +80,43 @@ def save_checkpoint(ckpt_dir, step: int, tree, *, host_index: int = 0):
         f.write(json.dumps(manifest))
         f.flush()
         os.fsync(f.fileno())
-    # atomic publish.  Order matters for crash safety: a re-save of an
-    # already-committed step must retire the OLD marker before the old
-    # directory goes away — otherwise a crash between rmtree and rename
-    # leaves a committed marker pointing at nothing (the torn-save window;
-    # latest_step/restore_checkpoint additionally skip such torn steps).
     marker = ckpt_dir / f"step_{step:09d}.COMMITTED"
-    marker.unlink(missing_ok=True)
-    if step_dir.exists():
-        shutil.rmtree(step_dir)
-    tmp_dir.rename(step_dir)
-    _fsync_dir(ckpt_dir)                  # make the rename durable
-    marker.write_text(str(time.time()))
-    _fsync_dir(ckpt_dir)                  # ... and the commit marker
+    publish_dir(ckpt_dir, tmp_dir, step_dir, marker)
     return step_dir
+
+
+def publish_dir(parent: Path, tmp_dir: Path, final_dir: Path,
+                marker: Path) -> None:
+    """The commit-marker publish protocol (shared by checkpoints and the
+    serving artifact).  Order matters for crash safety: a re-publish of an
+    already-committed directory must retire the OLD marker before the old
+    directory goes away — otherwise a crash between rmtree and rename
+    leaves a committed marker pointing at nothing (the torn-save window;
+    latest_step/restore_checkpoint and artifact loads skip such states)."""
+    marker.unlink(missing_ok=True)
+    if final_dir.exists():
+        shutil.rmtree(final_dir)
+    tmp_dir.rename(final_dir)
+    _fsync_dir(parent)                    # make the rename durable
+    marker.write_text(str(time.time()))
+    _fsync_dir(parent)                    # ... and the commit marker
+
+
+def atomic_write_text(path, text: str) -> None:
+    """Durable atomic single-file publish: write a tmp sibling, fsync it,
+    rename over the target, fsync the directory.  A bare
+    ``tmp.write_text(); tmp.rename()`` is atomic against *readers* but not
+    against power loss — the rename can land while the tmp's data blocks
+    are still unflushed, leaving an empty/garbage file under the final
+    name after a crash."""
+    path = Path(path)
+    tmp = path.with_name("." + path.name + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    tmp.rename(path)
+    _fsync_dir(path.parent)
 
 
 def _fsync_dir(path: Path) -> None:

@@ -14,34 +14,46 @@ from ..kernels import ref
 from .ops import EmbeddingOp
 
 
-def execute(op: EmbeddingOp, inputs: dict) -> jnp.ndarray:
+def _run(aot, name, fn, static: dict, *args, **kw):
+    """Dispatch one kernel call: the plain jit path, or — when the caller
+    holds an :class:`~repro.core.artifact.AotCache` — the AOT-compiled
+    executable (deserialized from the serving artifact or lowered once)."""
+    if aot is None:
+        return fn(*args, **kw, **static)
+    return aot.call(name, fn, static, *args, **kw)
+
+
+def execute(op: EmbeddingOp, inputs: dict, aot=None) -> jnp.ndarray:
     if op.kind == "gather":
         idxs = jnp.asarray(inputs["idxs"])
         if "roff" in inputs:   # fused multi-table: per-segment table base
             idxs = idxs + jnp.asarray(inputs["roff"], jnp.int32)
-        return ref.block_gather(jnp.asarray(inputs["table"]), idxs,
-                                block_rows=op.block_rows)
+        return _run(aot, "ref.block_gather", ref.block_gather,
+                    {"block_rows": op.block_rows},
+                    jnp.asarray(inputs["table"]), idxs)
     if op.kind == "kg":
         seg = np.arange(op.num_segments, dtype=np.int32)
-        return ref.sls(jnp.asarray(inputs["table"]),
-                       jnp.asarray(inputs["idxs"]), jnp.asarray(seg),
-                       jnp.asarray(inputs["vals"]),
-                       num_segments=op.num_segments,
-                       add_op=op.semiring.add, mul_op=op.semiring.mul)
+        return _run(aot, "ref.sls", ref.sls,
+                    {"num_segments": op.num_segments,
+                     "add_op": op.semiring.add, "mul_op": op.semiring.mul},
+                    jnp.asarray(inputs["table"]),
+                    jnp.asarray(inputs["idxs"]), jnp.asarray(seg),
+                    jnp.asarray(inputs["vals"]))
     seg = ref.csr_to_lookups(_ptrs_of(op, inputs))
     if op.kind == "fusedmm":
-        return ref.fusedmm(jnp.asarray(inputs["x"]),
-                           jnp.asarray(inputs["idxs"]), jnp.asarray(seg),
-                           num_segments=op.num_segments)
+        return _run(aot, "ref.fusedmm", ref.fusedmm,
+                    {"num_segments": op.num_segments},
+                    jnp.asarray(inputs["x"]),
+                    jnp.asarray(inputs["idxs"]), jnp.asarray(seg))
     w = inputs.get("vals")
     idxs = np.asarray(inputs["idxs"])
     if "roff" in inputs:       # fused multi-table: rebase per lookup
         idxs = idxs + np.asarray(inputs["roff"], np.int64)[seg]
-    return ref.sls(jnp.asarray(inputs["table"]), jnp.asarray(idxs),
-                   jnp.asarray(seg),
-                   None if w is None else jnp.asarray(w),
-                   num_segments=op.num_segments,
-                   add_op=op.semiring.add, mul_op=op.semiring.mul)
+    return _run(aot, "ref.sls", ref.sls,
+                {"num_segments": op.num_segments,
+                 "add_op": op.semiring.add, "mul_op": op.semiring.mul},
+                jnp.asarray(inputs["table"]), jnp.asarray(idxs),
+                jnp.asarray(seg), None if w is None else jnp.asarray(w))
 
 
 def _ptrs_of(op: EmbeddingOp, inputs: dict) -> np.ndarray:

@@ -71,8 +71,19 @@ def make_plan(res: CompileResult) -> KernelPlan:
     )
 
 
+def _run(aot, name, fn, static: dict, *args, **kw):
+    """Dispatch one kernel launch: the plain jit wrapper, or — when the
+    caller holds an :class:`~repro.core.artifact.AotCache` — the
+    AOT-compiled executable (deserialized from the serving artifact or
+    lowered once).  ``fn`` must be the underlying jit object (the public
+    :mod:`repro.kernels.ops` wrappers are plain functions, no ``lower``)."""
+    if aot is None:
+        return fn(*args, **kw, **static)
+    return aot.call(name, fn, static, *args, **kw)
+
+
 def execute(res: CompileResult, inputs: dict, interpret: bool = True,
-            max_lookups: Optional[int] = None):
+            max_lookups: Optional[int] = None, aot=None):
     """Run the compiled op through the Pallas DAE kernels.
 
     ``max_lookups`` (the kernel's static lookup-slot grid extent) is derived
@@ -83,24 +94,25 @@ def execute(res: CompileResult, inputs: dict, interpret: bool = True,
     """
     op = res.op
     plan = make_plan(res)
+    interp = kops.default_interpret() if interpret is None else bool(interpret)
     if op.kind == "gather":
         assert plan.store_stream or opt_level_index(res.opt_level) < 3
         idxs = jnp.asarray(inputs["idxs"])
         if plan.batched and "roff" in inputs:
             # table-offset stream: rebase is scalar index math ahead of DMA
             idxs = idxs + jnp.asarray(inputs["roff"], jnp.int32)
-        return kops.block_gather(jnp.asarray(inputs["table"]), idxs,
-                                 block_rows=op.block_rows,
-                                 interpret=interpret)
+        return _run(aot, "block_gather_pallas", kops.block_gather_pallas,
+                    {"block_rows": op.block_rows, "interpret": interp},
+                    jnp.asarray(inputs["table"]), idxs)
     if op.kind == "fusedmm":
         ptrs = _ptrs_of(op, inputs)
         if max_lookups is None:
             max_lookups = kops.max_lookups_of(np.asarray(ptrs))
-        return kops.fusedmm(jnp.asarray(inputs["x"]), jnp.asarray(ptrs),
-                            jnp.asarray(inputs["idxs"]),
-                            num_segments=op.num_segments,
-                            max_lookups=max_lookups,
-                            interpret=interpret)
+        return _run(aot, "fusedmm_pallas", kops.fusedmm_pallas,
+                    {"num_segments": op.num_segments,
+                     "max_lookups": max_lookups, "interpret": interp},
+                    jnp.asarray(inputs["x"]), jnp.asarray(ptrs),
+                    jnp.asarray(inputs["idxs"]))
     if op.kind == "kg":
         ptrs = np.arange(op.num_segments + 1, dtype=np.int32)
         w = inputs["vals"]
@@ -114,14 +126,15 @@ def execute(res: CompileResult, inputs: dict, interpret: bool = True,
     seg_base = None
     if plan.batched and "roff" in inputs:
         seg_base = jnp.asarray(inputs["roff"], jnp.int32)
-    return kops.sls(jnp.asarray(inputs["table"]), jnp.asarray(ptrs),
-                    jnp.asarray(inputs["idxs"]),
-                    None if w is None else jnp.asarray(w),
-                    num_segments=op.num_segments,
-                    max_lookups=max_lookups,
-                    add_op=op.semiring.add, mul_op=op.semiring.mul,
-                    col_tile=col_tile, interpret=interpret,
-                    seg_base=seg_base)
+    return _run(aot, "sls_pallas", kops.sls_pallas,
+                {"num_segments": op.num_segments,
+                 "max_lookups": max_lookups,
+                 "add_op": op.semiring.add, "mul_op": op.semiring.mul,
+                 "col_tile": col_tile, "interpret": interp},
+                jnp.asarray(inputs["table"]), jnp.asarray(ptrs),
+                jnp.asarray(inputs["idxs"]),
+                None if w is None else jnp.asarray(w),
+                seg_base=seg_base)
 
 
 def execute_program(pres: ProgramCompileResult, inputs: dict,

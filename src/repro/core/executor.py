@@ -59,6 +59,7 @@ import dataclasses
 import functools
 import weakref
 from collections import deque
+from pathlib import Path
 from typing import Optional
 
 import jax
@@ -442,10 +443,48 @@ class ProgramExecutor:
                       "stale_steps": 0, "degraded_failed_steps": 0,
                       "hot_swaps": 0, "hot_swaps_rejected": 0,
                       "spilled_lookups": 0}
+        # serving artifact (core/artifact.py): attach_artifact() arms the
+        # AOT executable cache; executors built without an artifact_dir
+        # keep aot=None — the plain jit C++ fastpath, zero new overhead
+        self.aot = None
+        self.compile_source = "fresh"     # fresh | artifact
+        self._artifact_dir: Optional[Path] = None
+        self._artifact_meta: Optional[dict] = None
 
     def _fire(self, site: str) -> None:
         if self.faults is not None:
             self.faults.fire(site, program=self.compiled.program.name)
+
+    # ------------------------------------------------------------------
+    # Serving artifact (core/artifact.py)
+    # ------------------------------------------------------------------
+
+    def attach_artifact(self, artifact_dir, meta: dict,
+                        payloads: Optional[dict] = None,
+                        source: str = "fresh") -> None:
+        """Arm the AOT executable cache against a serving artifact: eager
+        kernel dispatches now run AOT-compiled executables, hydrated from
+        ``payloads`` (deserialized lazily per call key) or lowered once."""
+        from . import artifact as art
+        self._artifact_dir = Path(artifact_dir)
+        self._artifact_meta = dict(meta)
+        self.aot = art.AotCache(payloads)
+        self.compile_source = source
+
+    def save_artifact(self) -> Optional[Path]:
+        """Persist the compile result + every AOT executable captured so
+        far (atomic re-publish; idempotent).  Call again after the first
+        step so the artifact carries the executables of the shapes this
+        deployment actually serves — that is what lets the next boot reach
+        its first token without a single trace."""
+        if self._artifact_dir is None or self._artifact_meta is None:
+            return None
+        from . import artifact as art
+        if self.aot is None:
+            self.aot = art.AotCache()
+        return art.save_artifact(self._artifact_dir, self.compiled,
+                                 meta=self._artifact_meta,
+                                 aot_payloads=self.aot.payloads())
 
     def _plan_for(self, u: _UnitState) -> ap.AccessPlan:
         """The unit's AccessPlan: the compiled artifact when it matches this
@@ -865,11 +904,16 @@ class ProgramExecutor:
     # Step loop
     # ------------------------------------------------------------------
 
-    def _execute(self, u: _UnitState, ins: dict, ml):
+    def _execute(self, u: _UnitState, ins: dict, ml, aot=None):
+        """``aot`` is only ever passed at *eager* call sites: run-closures
+        traced into the wave executable (:meth:`_unit_run`) and shard_map
+        bodies cannot invoke an AOT-compiled callable mid-trace, so they
+        keep the plain jit path (trace-on-load fallback, see
+        :mod:`repro.core.artifact`)."""
         if self.backend == "jax":
-            return bj.execute(u.res.op, ins)
+            return bj.execute(u.res.op, ins, aot=aot)
         return bp.execute(u.res, ins, interpret=self.interpret,
-                          max_lookups=ml)
+                          max_lookups=ml, aot=aot)
 
     def _txn_defer(self, outs: dict, dev: dict, run) -> None:
         """Stage a gather-kind unit's per-step host arrays on the wave's
@@ -946,10 +990,11 @@ class ProgramExecutor:
                                 else np.asarray(v) for k, v in ins.items()}
                         self._txn_defer(outs, norm, self._unit_run(u))
                         continue
-                    outs[name] = bj.execute(u.res.op, ins)
+                    outs[name] = bj.execute(u.res.op, ins, aot=self.aot)
                     continue
                 dev, ml = self._marshal_single(idx, u, uin)
-                outs[u.unit.names[0]] = self._execute(u, dev, ml)
+                outs[u.unit.names[0]] = self._execute(u, dev, ml,
+                                                      aot=self.aot)
                 continue
             if self.shards > 1:
                 # epoch-checked marshaling: the plan interpreted here must
@@ -968,10 +1013,10 @@ class ProgramExecutor:
                 if self._txn is not None and self.backend == "jax":
                     self._txn_defer(outs, dev, self._unit_run(u))
                     continue
-                fused = self._execute(u, dev, ml)
+                fused = self._execute(u, dev, ml, aot=self.aot)
             else:
                 dev, ml = self._marshal_csr(idx, u, uin)
-                fused = self._execute(u, dev, ml)
+                fused = self._execute(u, dev, ml, aot=self.aot)
             for name, mop, off in zip(u.group.members, u.group.member_ops,
                                       u.group.seg_offsets):
                 outs[name] = fused[off:off + mop.num_segments]
@@ -1650,7 +1695,7 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                  index_policy: str = "strict", service: str = "inproc",
                  service_pool=None,
                  degrade_policy: str = "fail",
-                 adaptive=None) -> ProgramExecutor:
+                 adaptive=None, artifact_dir=None) -> ProgramExecutor:
     """The steady-state entry point: compile (compile-cache backed) and
     return the memoized executor whose marshaling cache is already warm for
     this signature.
@@ -1687,7 +1732,15 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     head when the windowed hot hit-rate collapses and swap the slab in
     place (no recompile — see :meth:`ProgramExecutor.swap_hot_slab`), plus
     hot-aware spill routing off overloaded lattice diagonals.  Hashable,
-    so it keys the executor cache like every other knob."""
+    so it keys the executor cache like every other knob.
+
+    ``artifact_dir`` points at a serving artifact (:mod:`repro.core
+    .artifact`): on an executor-cache miss the compile payload + AOT
+    executables hydrate from disk *before* any compilation (fingerprint/
+    identity mismatches fall back to a fresh compile, counted), and a
+    fresh compile is saved back so the next boot loads.  Deliberately NOT
+    part of the executor-cache key — the artifact changes where a compile
+    comes from, never what it computes."""
     # canonicalize defaults so explicit-default calls hit the same entry
     interpret = kops.default_interpret() if interpret is None else interpret
     shards = sp.shard_count(mesh, shard_axis)
@@ -1724,8 +1777,30 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
     ex = _EXECUTOR_CACHE.get(key)
     if ex is not None:
         return ex
-    compiled = compile_program(program, opt_level, vlen=vlen, budget=budget,
-                               hot_rows=hot_rows)
+    compiled = None
+    payloads = None
+    source = "fresh"
+    ameta = None
+    if artifact_dir is not None:
+        from . import artifact as art
+        ameta = art.artifact_meta(program, opt_level=opt_level, vlen=vlen,
+                                  budget=budget, hot_rows=hot_rows,
+                                  backend=backend, interpret=interpret)
+        loaded = art.load_artifact(artifact_dir, ameta)
+        if loaded is not None:
+            compiled, payloads = loaded
+            source = "artifact"
+            # hydrate the compile cache: later compile_program calls with
+            # this identity (other executors, direct callers) hit too
+            from .pipeline import seed_compile_cache
+            seed_compile_cache(
+                art.compile_key_of(program, ameta, budget=budget,
+                                   hot_rows=hot_rows), compiled)
+        else:
+            art.note_fresh_compile()
+    if compiled is None:
+        compiled = compile_program(program, opt_level, vlen=vlen,
+                                   budget=budget, hot_rows=hot_rows)
     ex = ProgramExecutor(compiled, interpret=interpret, depth=depth,
                          backend=backend, mesh=mesh, shard_axis=shard_axis,
                          hot_rows=hot_rows if shards > 1 else service_hot,
@@ -1734,6 +1809,13 @@ def executor_for(program: EmbeddingProgram, opt_level: str = "O3",
                          index_policy=index_policy, service=service,
                          service_pool=service_pool,
                          degrade_policy=degrade_policy, adaptive=adaptive)
+    if artifact_dir is not None:
+        ex.attach_artifact(artifact_dir, ameta, payloads, source)
+        if source == "fresh":
+            # save on first compile, so the NEXT boot loads; callers that
+            # step the executor re-save (save_artifact is idempotent) to
+            # capture the AOT executables of the shapes actually served
+            ex.save_artifact()
     _EXECUTOR_CACHE.put(key, ex)
     return ex
 

@@ -219,6 +219,24 @@ def clear_compile_cache() -> None:
     _COMPILE_CACHE.clear()
 
 
+def compile_cache_key(program: EmbeddingProgram, opt_level: str,
+                      vlen: int = 128, fuse: bool = True,
+                      budget: Optional[FusionBudget] = None,
+                      hot_rows=None) -> tuple:
+    """The memoization key of :func:`compile_program` — also the compile
+    half of the serving artifact's identity (:mod:`repro.core.artifact`)."""
+    budget = budget or FusionBudget()
+    return (program.signature(), opt_level, vlen, fuse, budget,
+            canonical_hot(hot_rows))
+
+
+def seed_compile_cache(key: tuple, result: ProgramCompileResult) -> None:
+    """Hydrate the compile cache from a deserialized artifact: the next
+    :func:`compile_program` with this key is a cache hit, not a re-run of
+    the PassManager pipeline."""
+    _COMPILE_CACHE.put(key, result)
+
+
 def _compile_one(op: EmbeddingOp, opt_level: str, vlen: int,
                  pm: PassManager, group=None, shards: int = 1,
                  hot_rows=None) -> CompileResult:
@@ -251,8 +269,7 @@ def compile_program(program: EmbeddingProgram, opt_level: str = "O3",
     """
     assert opt_level in OPT_LEVELS, opt_level
     budget = budget or FusionBudget()  # canonical: None = the default budget
-    key = (program.signature(), opt_level, vlen, fuse, budget,
-           canonical_hot(hot_rows))
+    key = compile_cache_key(program, opt_level, vlen, fuse, budget, hot_rows)
     if use_cache and pm is None:
         cached = _COMPILE_CACHE.get(key)
         if cached is not None:

@@ -65,6 +65,13 @@ def main():
                     help="embedding-service replicas behind --disagg")
     ap.add_argument("--rpc-timeout-s", type=float, default=30.0,
                     help="per-call RPC deadline of the service client")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="AOT serving artifact directory "
+                         "(core/artifact.py): boot loads the compiled "
+                         "program + serialized executables from here "
+                         "instead of compiling (fingerprint-gated, falls "
+                         "back to a fresh compile); a fresh compile is "
+                         "saved back after the first wave")
     ap.add_argument("--degrade-policy", default="fail",
                     choices=("fail", "stale"),
                     help="cold-lookup resolution while every replica is "
@@ -106,7 +113,8 @@ def main():
                            faults=faults,
                            service="disagg" if args.disagg else "inproc",
                            service_pool=pool,
-                           degrade_policy=args.degrade_policy)
+                           degrade_policy=args.degrade_policy,
+                           artifact_dir=args.artifact_dir)
         _drive(srv, lm, cfg, args, faults, pool)
     finally:
         if pool is not None:
@@ -125,6 +133,8 @@ def _drive(srv, lm, cfg, args, faults, pool):
           f"all done={all(r.done for r in reqs)}; "
           f"statuses={dict(statuses)}")
     print("serve_stats:", srv.serve_stats)
+    if args.artifact_dir and srv.compile_stats is not None:
+        print("artifact:", srv.compile_stats.get("artifact", {}))
     if pool is not None:
         print("service_pool:", pool.stats())
     if faults is not None:

@@ -110,34 +110,73 @@ def _table_key(op: EmbeddingOp) -> str:
     return "x" if op.kind == "fusedmm" else "table"
 
 
+def _write_program_meta(warm_dir, meta: dict) -> None:
+    """Durable atomic publish of ``program.json`` — the ckpt tier's
+    fsync-before-rename helper, shared rather than re-implemented: a bare
+    ``tmp.write_text(); tmp.rename()`` is atomic against concurrent
+    readers but leaves the torn-publish window against power loss that
+    PR 8 closed for checkpoints."""
+    from ..checkpoint import atomic_write_text
+    atomic_write_text(Path(warm_dir) / "program.json", json.dumps(meta))
+
+
+def _prune_table_steps(tables_dir: Path, keep: int = 2) -> None:
+    """Keep-N retention over the warm tables (the CheckpointManager._gc
+    shape).  ``keep >= 2`` so the step a just-superseded ``program.json``
+    still references survives one more publish cycle."""
+    import shutil
+
+    from ..checkpoint import committed_steps
+    for s in committed_steps(tables_dir)[:-keep]:
+        (tables_dir / f"step_{s:09d}.COMMITTED").unlink(missing_ok=True)
+        shutil.rmtree(tables_dir / f"step_{s:09d}", ignore_errors=True)
+
+
 def write_warm_artifact(warm_dir, bind_meta: dict, tables: dict,
                         version: int) -> None:
-    """Publish the re-warm artifact: ``program.json`` (atomic rename) +
-    the table tree checkpointed at ``version`` (atomic by construction —
-    ``save_checkpoint``'s commit-marker protocol)."""
+    """Publish the re-warm artifact.  Order is the crash-safety contract:
+    the table checkpoint commits FIRST (``save_checkpoint``'s
+    commit-marker protocol), then ``program.json`` — stamped with the
+    committed ``table_step`` — publishes atomically.  A crash between the
+    two leaves the *previous* meta referencing its own still-committed
+    step (a consistent pair); the reverse order could pair post-update
+    meta with pre-update tables, which ``read_warm_artifact`` would have
+    no way to detect without the stamp."""
     from ..checkpoint import save_checkpoint
     warm_dir = Path(warm_dir)
     warm_dir.mkdir(parents=True, exist_ok=True)
-    tmp = warm_dir / ".program.json.tmp"
-    tmp.write_text(json.dumps(bind_meta))
-    tmp.rename(warm_dir / "program.json")
     save_checkpoint(warm_dir / "tables", version,
                     {op: np.asarray(a) for op, a in tables.items()})
+    meta = dict(bind_meta)
+    meta["table_step"] = int(version)
+    _write_program_meta(warm_dir, meta)
+    _prune_table_steps(warm_dir / "tables")
 
 
 def read_warm_artifact(warm_dir) -> Optional[tuple]:
-    """``(bind_meta, tables)`` when a complete artifact exists, else
-    None.  Torn checkpoints fall back per ``latest_step``'s contract."""
-    from ..checkpoint import latest_step, restore_checkpoint
+    """``(bind_meta, tables)`` when a complete *consistent* artifact
+    exists, else None.  The meta's ``table_step`` stamp is cross-checked
+    against the committed checkpoint steps: a meta referencing a torn or
+    pruned step (a crash inside the publish window, or a mismatched pair
+    written by pre-stamp code) is rejected rather than silently re-warming
+    a replica with tables from a different version than its hot spec."""
+    from ..checkpoint import committed_steps, restore_checkpoint
     warm_dir = Path(warm_dir)
     pj = warm_dir / "program.json"
-    if not pj.exists() or latest_step(warm_dir / "tables") is None:
+    if not pj.exists():
         return None
     meta = json.loads(pj.read_text())
+    steps = committed_steps(warm_dir / "tables")
+    step = meta.get("table_step")
+    if step is None:
+        # legacy (pre-stamp) artifact: best-effort latest committed step
+        step = steps[-1] if steps else None
+    if step is None or step not in steps:
+        return None
     like = {name: np.zeros((), np.float32)
             for name, _ in meta["program"]["ops"]
             if name in meta["table_ops"]}
-    tables, _ = restore_checkpoint(warm_dir / "tables", like)
+    tables, _ = restore_checkpoint(warm_dir / "tables", like, step=step)
     return meta, tables
 
 
@@ -159,6 +198,8 @@ class EmbeddingService:
         self.steps = 0
         self.replays = 0
         self.warm_source = "none"        # none | bind | artifact
+        self.compile_source = "none"     # none | fresh | artifact
+        self._aot_saved = False          # first-step AOT capture done
         self.hot_epoch = 0               # adaptive slab generation bound
         self._replay: dict = {}          # client id -> (seq, meta, arrays)
         self._lock = threading.Lock()
@@ -167,14 +208,44 @@ class EmbeddingService:
     # -- binding -----------------------------------------------------------
 
     def _bind_from(self, meta: dict, tables: dict, source: str) -> None:
+        from ..core import artifact as art
         from ..core.executor import ProgramExecutor
-        from ..core.pipeline import compile_program
+        from ..core.pipeline import compile_program, seed_compile_cache
         program = spec_to_program(meta["program"])
-        compiled = compile_program(program, meta["opt_level"],
-                                   vlen=meta["vlen"])
+        # AOT serving artifact (core/artifact.py) next to the warm
+        # artifact: a respawned replica not only re-warms its tables, it
+        # skips the PassManager + trace + XLA compile entirely when the
+        # fingerprinted artifact a previous life saved still matches
+        compiled = None
+        payloads = None
+        ameta = None
+        aot_dir = self.warm_dir / "aot" if self.warm_dir is not None \
+            else None
+        self.compile_source = "fresh"
+        if aot_dir is not None:
+            ameta = art.artifact_meta(
+                program, opt_level=meta["opt_level"], vlen=meta["vlen"],
+                backend=meta["backend"], interpret=meta["interpret"])
+            loaded = art.load_artifact(aot_dir, ameta)
+            if loaded is not None:
+                compiled, payloads = loaded
+                self.compile_source = "artifact"
+                seed_compile_cache(
+                    art.compile_key_of(program, ameta), compiled)
+            else:
+                art.note_fresh_compile()
+        if compiled is None:
+            compiled = compile_program(program, meta["opt_level"],
+                                       vlen=meta["vlen"])
         self.executor = ProgramExecutor(
             compiled, interpret=meta["interpret"], depth=2,
             backend=meta["backend"], index_policy=meta["index_policy"])
+        if aot_dir is not None:
+            self.executor.attach_artifact(aot_dir, ameta, payloads,
+                                          self.compile_source)
+        # a fresh compile re-saves after the first executed step (AOT
+        # executables captured); an artifact boot already has them on disk
+        self._aot_saved = self.compile_source == "artifact"
         self.table_keys = {name: _table_key(op) for name, op in program.ops}
         self.tables = {op: {self.table_keys[op]: np.asarray(a)}
                        for op, a in tables.items()}
@@ -203,6 +274,7 @@ class EmbeddingService:
                     "bound": self.executor is not None,
                     "replays": self.replays,
                     "warm_source": self.warm_source,
+                    "compile_source": self.compile_source,
                     "hot_epoch": self.hot_epoch}, {}
         if kind == "bind":
             self._bind_from(meta, arrays, source="bind")
@@ -248,6 +320,16 @@ class EmbeddingService:
             op, _, stream = key.partition("/")
             inputs.setdefault(op, {})[stream] = arr
         outs = self.executor.step(inputs)
+        if not self._aot_saved:
+            # first executed step: the AOT executables of the shapes this
+            # deployment actually serves exist now — persist them so the
+            # next (re)spawn boots by loading, not compiling.  Best-effort:
+            # a failed save must never fail the step.
+            self._aot_saved = True
+            try:
+                self.executor.save_artifact()
+            except OSError:
+                pass
         rmeta = {"ok": True, "seq": seq, "steps": self.steps}
         rarrays = {op: np.asarray(v) for op, v in outs.items()}
         self._replay[client] = (seq, rmeta, rarrays)
@@ -435,7 +517,7 @@ class ServicePool:
             "failovers": 0, "respawns": 0, "breaker_open": 0,
             "heartbeats": 0, "hb_misses": 0, "replays": 0,
             "hot_publishes": 0,
-            "recoveries_s": [], "warm_sources": []}
+            "recoveries_s": [], "warm_sources": [], "compile_sources": []}
         for r in self.replicas:
             self._spawn(r)
         self.wait_ready()
@@ -532,6 +614,8 @@ class ServicePool:
                     time.perf_counter() - r.t_dead)
                 r.t_dead = None
             self.pool_stats["warm_sources"].append(meta["warm_source"])
+            self.pool_stats["compile_sources"].append(
+                meta.get("compile_source", "none"))
         # a replica revived from the warm artifact is already bound; one
         # that came back BEFORE any bind happened just waits for it
         return True
@@ -697,9 +781,10 @@ class ServicePool:
         meta["hot_epoch"] = int(meta.get("hot_epoch", 0)) + 1
         warm_dir = Path(self.warm_dir)
         warm_dir.mkdir(parents=True, exist_ok=True)
-        tmp = warm_dir / ".program.json.tmp"
-        tmp.write_text(json.dumps(meta))
-        tmp.rename(warm_dir / "program.json")
+        # the republished meta must keep referencing the committed table
+        # step it was bound with (a swap re-ranks, it never re-ships rows)
+        meta["table_step"] = int(self._table_version)
+        _write_program_meta(warm_dir, meta)
         self._bind_call = (meta, arrays)
         self.pool_stats["hot_publishes"] += 1
         try:
@@ -849,6 +934,7 @@ class ServicePool:
         s = dict(self.pool_stats)
         s["recoveries_s"] = list(self.pool_stats["recoveries_s"])
         s["warm_sources"] = list(self.pool_stats["warm_sources"])
+        s["compile_sources"] = list(self.pool_stats["compile_sources"])
         s["states"] = [r.state for r in self.replicas]
         s["spawns"] = [r.spawns for r in self.replicas]
         return s

@@ -111,9 +111,16 @@ class DecodeServer:
                  wave_deadline_s: Optional[float] = None,
                  wave_retries: int = 1,
                  faults=None, service: str = "inproc",
-                 service_pool=None, degrade_policy: str = "fail"):
+                 service_pool=None, degrade_policy: str = "fail",
+                 artifact_dir=None):
         assert index_policy in INDEX_POLICIES, index_policy
         self.lm = lm
+        # serving artifact (core/artifact.py): boot hydrates the compile
+        # cache + AOT executables from here instead of compiling; a fresh
+        # compile saves at build and re-saves after the first wave (the
+        # captured executables of the shapes actually served)
+        self.artifact_dir = artifact_dir
+        self._artifact_saved = False
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
@@ -211,11 +218,13 @@ class DecodeServer:
             self.compile_stats = self._gather_compile_stats()
 
     def _resolve_executor(self):
+        kw = dict(self._svc_kw)
+        if self.artifact_dir is not None:
+            kw["artifact_dir"] = self.artifact_dir
         if hasattr(self.lm, "embedding_executor"):
-            return self.lm.embedding_executor(self.slots, 1,
-                                              **self._svc_kw)
+            return self.lm.embedding_executor(self.slots, 1, **kw)
         return self._emb_exec.executor_for(
-            self.lm.embedding_program(self.slots, 1), **self._svc_kw)
+            self.lm.embedding_program(self.slots, 1), **kw)
 
     def _gather_compile_stats(self) -> dict:
         s = self._emberc.compile_cache_stats()
@@ -232,6 +241,13 @@ class DecodeServer:
         # the compiled access side, observable: hot/cold layout, exchange
         # bytes est. vs. actual, per-pass plan-build time (plan-access)
         s["access_plans"] = self.emb_executor.access_plan_stats()
+        if self.artifact_dir is not None:
+            # where this boot's compile came from + the process-wide
+            # load/reject counters (the version-skew runbook observable)
+            from ..core.artifact import artifact_stats
+            s["artifact"] = {
+                "compile_source": self.emb_executor.compile_source,
+                **artifact_stats()}
         if self.pipeline_group is not None:
             s["pipeline_group"] = self.pipeline_group.group_stats()
         return s
@@ -505,6 +521,15 @@ class DecodeServer:
         self.waves += 1
         self.serve_stats["waves"] += 1
         self.serve_stats["prefill_waves" if c > 1 else "decode_waves"] += 1
+        if self.artifact_dir is not None and not self._artifact_saved \
+                and self.emb_executor is not None:
+            # first wave done: re-save so the artifact carries the AOT
+            # executables captured while serving it (idempotent publish)
+            self._artifact_saved = True
+            try:
+                self.emb_executor.save_artifact()
+            except OSError:
+                pass                     # a failed save never fails a wave
         now = time.perf_counter()
         # mid-wave expiry: a slot still waiting on its first token whose
         # TTFT budget lapsed during service retires here (terminal), so an
